@@ -1,0 +1,76 @@
+"""Shared harness for the theory-validation benchmarks (V1–V6 in DESIGN.md).
+
+All benchmarks run the synthetic NC-SC quadratic (exact ∇Φ oracle) because
+the paper's claims are about convergence/communication complexity, not about
+any particular model.  Each benchmark emits CSV rows and returns a dict for
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AlgorithmConfig
+from repro.core import (
+    diagnostics,
+    init_state,
+    make_quadratic_data,
+    make_round_step,
+    quadratic_problem,
+)
+
+DX, DY = 10, 5
+
+
+def run_to_epsilon(
+    *,
+    n: int = 8,
+    K: int = 4,
+    sigma: float = 0.1,
+    heterogeneity: float = 1.0,
+    topology: str = "ring",
+    algorithm: str = "kgt_minimax",
+    eta_cx: float = 0.01,
+    eta_cy: float = 0.1,
+    eta_s: float = 0.5,
+    eps: float = 0.3,
+    max_rounds: int = 2000,
+    seed: int = 0,
+    mixing_impl: str = "dense",
+    eval_every: int = 10,
+):
+    """Returns (rounds_to_eps or None, final ||grad Phi||, wall_s, history)."""
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=DX, dy=DY, heterogeneity=heterogeneity)
+    prob = quadratic_problem(data, sigma=sigma)
+    cfg = AlgorithmConfig(algorithm=algorithm, num_clients=n, local_steps=K,
+                          eta_cx=eta_cx, eta_cy=eta_cy, eta_sx=eta_s, eta_sy=eta_s,
+                          topology=topology, mixing_impl=mixing_impl)
+    cb = {k: v for k, v in data.items() if k != "mu"}
+    kb = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.local_steps, *v.shape)), cb)
+    k_eff = cfg.local_steps
+    st = init_state(prob, cfg, key, init_batch=cb,
+                    init_keys=jax.random.split(key, n))
+    step = jax.jit(make_round_step(prob, cfg))
+    grad_fn = jax.jit(lambda s: prob.phi_grad_norm(
+        jax.tree.map(lambda x: x.mean(0), s.x)))
+
+    hist = []
+    hit = None
+    t0 = time.time()
+    for t in range(max_rounds):
+        keys = jax.random.split(jax.random.PRNGKey(seed * 7919 + t),
+                                k_eff * n).reshape(k_eff, n, 2)
+        st = step(st, kb, keys)
+        if (t + 1) % eval_every == 0:
+            g = float(grad_fn(st))
+            hist.append((t + 1, g))
+            if hit is None and g < eps:
+                hit = t + 1
+                break
+    final = hist[-1][1] if hist else float("nan")
+    return hit, final, time.time() - t0, hist

@@ -1,0 +1,112 @@
+"""Roofline report: derive the three per-device time terms for every
+(arch x shape x mesh) entry of the dry-run JSONL.
+
+  compute_s    = parsed dot FLOPs / 197e12           (bf16 MXU peak, v5e)
+  memory_s     = parsed HBM traffic / 819e9          (HBM bandwidth)
+  collective_s = parsed collective bytes / 50e9      (per-link ICI proxy)
+
+FLOPs/traffic/collective bytes come from the loop-aware HLO parse
+(repro.analysis.hlo_cost) — XLA's own cost_analysis counts while bodies once.
+MODEL_FLOPS uses 6·N·D (train, N=active params) / 2·N·D (inference) per
+device; the ratio against parsed FLOPs measures remat/dispatch overhead.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES
+from repro.launch import mesh as mesh_lib
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link (proxy: all parsed bytes over 1 link)
+
+
+def model_flops_per_device(arch: str, shape_name: str, mesh_kind: str) -> float:
+    cfg = registry.get_model_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    multi = mesh_kind == "multi"
+    chips = 512 if multi else 256
+    if shape.kind == "train":
+        mcfg = mesh_lib.decentralized_mesh_config(arch, multi_pod=multi)
+        k_steps = 2  # dry-run AlgorithmConfig default
+        tokens_per_client = shape.global_batch // mcfg.num_clients * shape.seq_len
+        per_client_chips = mcfg.fsdp * mcfg.model
+        return k_steps * 6.0 * n_active * tokens_per_client / per_client_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / chips
+
+
+def load(path: str) -> List[Dict]:
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def analyze_entry(r: Dict) -> Optional[Dict]:
+    if "error" in r:
+        return None
+    coll = sum(v for k, v in r["collectives"].items() if not k.startswith("n_"))
+    compute_s = r["cost"]["dot_flops"] / PEAK_FLOPS
+    memory_s = r["cost"]["traffic_bytes"] / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(r["arch"], r["shape"], r["mesh"])
+    useful = mf / r["cost"]["dot_flops"] if r["cost"]["dot_flops"] else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": mf, "useful_ratio": useful,
+        "peak_gib": r["memory"]["peak_per_device"] / 2**30,
+    }
+
+
+def what_would_help(row: Dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("cut gossip/FSDP bytes: bf16 gossip, ring ppermute, fewer "
+                "param regathers per local step")
+    if d == "memory":
+        return "raise arithmetic intensity: fuse, larger per-chip tiles, remat less"
+    if row["useful_ratio"] < 0.4:
+        return "compute-bound but wasteful: reduce remat/dispatch FLOPs"
+    return "compute-bound near roofline: scale batch or accept"
+
+
+def table(path: str, meshes=("single",)) -> str:
+    rows = [analyze_entry(r) for r in load(path)]
+    rows = [r for r in rows if r and r["mesh"] in meshes]
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | 6ND/HLO | peak GiB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} | {r['peak_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def run(csv=print, path: str = "/root/repo/results/dryrun.jsonl"):
+    rows = [analyze_entry(r) for r in load(path)]
+    rows = [r for r in rows if r]
+    for r in rows:
+        csv(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+            f"compute_s={r['compute_s']:.4f},memory_s={r['memory_s']:.4f},"
+            f"collective_s={r['collective_s']:.4f},dominant={r['dominant']},"
+            f"useful={r['useful_ratio']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    path = sys.argv[1] if len(sys.argv) > 1 else "/root/repo/results/dryrun.jsonl"
+    print(table(path, meshes=("single", "multi")))

@@ -1,0 +1,54 @@
+"""Benchmark runner — one benchmark per paper claim (Table 1 and Theorem 1's
+scaling terms) plus the roofline report over the dry-run artifacts.
+
+Prints ``name,key=value,...`` CSV lines and writes results/benchmarks.json.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run convergence topology
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from benchmarks import (
+    bench_convergence,
+    bench_heterogeneity,
+    bench_local_steps,
+    bench_speedup,
+    bench_topology,
+    roofline,
+)
+
+BENCHES = {
+    "convergence": bench_convergence.run,      # Table 1 proxy: vs baselines
+    "local_steps": bench_local_steps.run,      # V2: T vs K
+    "heterogeneity": bench_heterogeneity.run,  # V3: DH robustness
+    "topology": bench_topology.run,            # V4: T vs p
+    "speedup": bench_speedup.run,              # V5: linear speedup in n
+    "roofline": roofline.run,                  # deliverable (g)
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    results = {}
+    for name in names:
+        fn = BENCHES[name]
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            results[name] = fn(csv=lambda s: print(s, flush=True))
+        except FileNotFoundError as e:
+            print(f"{name},SKIPPED,missing artifact: {e}", flush=True)
+            continue
+        print(f"{name},wall_s={time.time()-t0:.1f}", flush=True)
+    os.makedirs("/root/repo/results", exist_ok=True)
+    with open("/root/repo/results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: K-GT-Minimax on a synthetic heterogeneous NC-SC problem.
+
+Five-minute tour of the public API: build a problem, a topology, the
+algorithm state, run rounds, watch ||grad Phi|| (exact oracle) fall while
+plain local SGDA stalls.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AlgorithmConfig
+from repro.core import (
+    diagnostics,
+    init_state,
+    make_quadratic_data,
+    make_round_step,
+    quadratic_problem,
+)
+
+N_CLIENTS, K = 8, 8
+
+
+def run(algorithm: str):
+    key = jax.random.PRNGKey(0)
+    data = make_quadratic_data(key, N_CLIENTS, dx=10, dy=5, heterogeneity=2.0)
+    problem = quadratic_problem(data, sigma=0.1)
+    cfg = AlgorithmConfig(
+        algorithm=algorithm, num_clients=N_CLIENTS, local_steps=K,
+        eta_cx=0.01, eta_cy=0.1,
+        eta_sx=0.5 if algorithm == "kgt_minimax" else 1.0,
+        eta_sy=0.5 if algorithm == "kgt_minimax" else 1.0,
+        topology="ring")
+
+    client_batch = {k: v for k, v in data.items() if k != "mu"}
+    batches = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (K, *v.shape)), client_batch)
+    state = init_state(problem, cfg, key, init_batch=client_batch,
+                       init_keys=jax.random.split(key, N_CLIENTS))
+    step = jax.jit(make_round_step(problem, cfg))
+
+    print(f"\n=== {algorithm} (n={N_CLIENTS}, K={K}, ring) ===")
+    for t in range(301):
+        keys = jax.random.split(jax.random.PRNGKey(t), K * N_CLIENTS)
+        state = step(state, batches, keys.reshape(K, N_CLIENTS, 2))
+        if t % 60 == 0:
+            d = diagnostics(problem, state)
+            print(f"round {t:4d}  ||grad Phi(x̄)|| = {float(d['phi_grad_norm']):.4f}"
+                  f"   consensus Ξx = {float(d['consensus_x']):.2e}")
+    return float(diagnostics(problem, state)["phi_grad_norm"])
+
+
+if __name__ == "__main__":
+    g_kgt = run("kgt_minimax")
+    g_local = run("local_sgda")
+    print(f"\nK-GT-Minimax reaches ||grad|| = {g_kgt:.4f}; "
+          f"local SGDA (no tracking) stalls at {g_local:.4f} "
+          f"under the same heterogeneity — the paper's DH-robustness claim.")

@@ -1,0 +1,249 @@
+"""Loop-aware cost extraction from compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body* once, which
+undercounts scanned programs (layer stacks, K local steps, CE chunks) by the
+trip count.  This module parses the HLO module text instead:
+
+  * builds the computation call graph (while bodies/conditions, fusions,
+    calls) with multiplicities — while trip counts recovered from the loop
+    condition's comparison constant (JAX scans: induction 0..N, LT bound);
+  * dot FLOPs from output shape x contracted-dim sizes (2·|out|·Πc);
+  * HBM traffic approximated as Σ (operand + output bytes) over executable
+    (non-fused-body) ops — a fusion reads its inputs and writes its output
+    once, which is exactly the post-fusion traffic model;
+  * per-collective-kind byte totals (output shape bytes per device).
+
+All numbers are per device (the compiled module is the per-device SPMD
+program).  Used by the dry-run and the roofline report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?)|\w+\[\])\s*"
+    r"([\w\-]+)\("
+)
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "add-dependency",
+}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo]
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], str, Dict[str, str]]:
+    """Returns (computations, entry_name, value_shapes name->type_str)."""
+    comps: Dict[str, Computation] = {}
+    shapes: Dict[str, str] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        hm = _HEADER_RE.match(line)
+        if hm and "=" not in s.split("(")[0]:
+            cur = Computation(name=hm.group(1), ops=[])
+            comps[cur.name] = cur
+            if s.startswith("ENTRY"):
+                entry = cur.name
+            # parameter shapes from the header
+            for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\))|\w+\[[\d,]*\](?:\{[^}]*\})?)", s):
+                shapes.setdefault(pm.group(1), pm.group(2))
+            continue
+        if s == "}":
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if dm and cur is not None:
+            op = OpInfo(name=dm.group(1), type_str=dm.group(2), opcode=dm.group(3),
+                        line=s)
+            cur.ops.append(op)
+            shapes[op.name] = op.type_str
+    return comps, entry, shapes
+
+
+def _dot_flops(op: OpInfo, shapes: Dict[str, str]) -> float:
+    out_elems = 0
+    for dt, dims in _shape_dims(op.type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    m = _OPERANDS_RE.search(op.line.split("=", 1)[1])
+    if not m:
+        return 0.0
+    names = [t.strip().lstrip("%") for t in m.group(1).split(",")]
+    names = [n.split(" ")[-1].lstrip("%") for n in names if n]
+    lhs = names[0] if names else None
+    cm = _CONTRACT_RE.search(op.line)
+    contract = 1
+    if lhs and cm is not None and lhs in shapes:
+        dims_l = _shape_dims(shapes[lhs])
+        if dims_l:
+            _, ldims = dims_l[0]
+            for idx in (int(i) for i in cm.group(1).split(",") if i):
+                if idx < len(ldims):
+                    contract *= ldims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _while_trip(cond: Computation) -> int:
+    consts = []
+    for op in cond.ops:
+        consts += [int(v) for v in _CONST_RE.findall(op.line)]
+    return max(consts) if consts else 1
+
+
+@dataclasses.dataclass
+class CostSummary:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    transcendental_elems: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "exponential-minus-one",
+                   "log-plus-one", "erf"}
+
+
+def analyze(hlo_text: str) -> CostSummary:
+    comps, entry, shapes = parse_module(hlo_text)
+    if not entry:
+        return CostSummary()
+
+    # computation multiplicities via DFS from entry
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        for op in comp.ops:
+            called = _CALLED_RE.findall(op.line)
+            if not called:
+                continue
+            if op.opcode == "while":
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                cm2 = re.search(r"condition=%?([\w.\-]+)", op.line)
+                body = bm.group(1) if bm else None
+                cond = cm2.group(1) if cm2 else None
+                trips = _while_trip(comps[cond]) if cond in comps else 1
+                if cond:
+                    visit(cond, m * (trips + 1))
+                if body:
+                    visit(body, m * trips)
+            else:
+                for group in called:
+                    for cn in group.split(","):
+                        visit(cn.strip().lstrip("%"), m)
+
+    visit(entry, 1.0)
+
+    # fused-body computations execute as part of their fusion op: their
+    # internal ops contribute FLOPs/transcendentals but NOT HBM traffic.
+    fused_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if fm:
+                    fused_bodies.add(fm.group(1))
+
+    out = CostSummary()
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = comp.name in fused_bodies
+        for op in comp.ops:
+            opc = op.opcode
+            if opc in ("dot", "dot-general", "convolution"):
+                out.dot_flops += m * _dot_flops(op, shapes)
+            if opc in _TRANSCENDENTAL:
+                elems = sum(
+                    int(np_prod(dims)) for _, dims in _shape_dims(op.type_str))
+                out.transcendental_elems += m * elems
+            base = opc.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not opc.endswith("-done"):
+                out.collective_bytes[base] += m * _shape_bytes(op.type_str)
+                out.collective_counts[base] += m
+            if not in_fusion and opc not in _SKIP_OPS and not opc.endswith("-done"):
+                # HBM traffic: output + operands
+                b = _shape_bytes(op.type_str)
+                ops_m = _OPERANDS_RE.search(op.line.split("=", 1)[1])
+                if ops_m:
+                    for t in ops_m.group(1).split(","):
+                        nm = t.strip().split(" ")[-1].lstrip("%")
+                        if nm in shapes:
+                            b += _shape_bytes(shapes[nm])
+                out.traffic_bytes += m * b
+    return out
+
+
+def np_prod(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import latest, load_metadata, restore, save  # noqa: F401

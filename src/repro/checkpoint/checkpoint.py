@@ -1,0 +1,59 @@
+"""Flat-npz checkpointing of full round state (no orbax in this environment).
+
+Pytrees are flattened to path-keyed arrays; restore rebuilds into the given
+template (shapes/dtypes validated).  Handles the KGTState dataclass, nested
+dicts/tuples, and scalar metadata.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = _flatten(tree)
+    arrays = {f"leaf_{i:05d}": np.asarray(x) for i, x in enumerate(flat)}
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f)
+
+
+def restore(path: str, template: Any) -> Any:
+    flat_t, treedef = _flatten(template)
+    with np.load(path) as z:
+        flat = [z[f"leaf_{i:05d}"] for i in range(len(flat_t))]
+    for i, (a, t) in enumerate(zip(flat, flat_t)):
+        ts = np.shape(t)
+        if tuple(a.shape) != tuple(ts):
+            raise ValueError(f"leaf {i}: checkpoint shape {a.shape} != template {ts}")
+    import jax.numpy as jnp
+
+    flat = [jnp.asarray(a, dtype=np.asarray(t).dtype) for a, t in zip(flat, flat_t)]
+    return jax.tree.unflatten(treedef, flat)
+
+
+def load_metadata(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)
+
+
+def latest(ckpt_dir: str) -> str | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    cands = sorted(
+        f for f in os.listdir(ckpt_dir) if f.endswith(".npz") and not f.endswith(".tmp.npz")
+    )
+    return os.path.join(ckpt_dir, cands[-1]) if cands else None

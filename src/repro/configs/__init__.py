@@ -1,0 +1,12 @@
+from repro.configs.base import (  # noqa: F401
+    AlgorithmConfig,
+    InputShape,
+    MeshConfig,
+    MinimaxConfig,
+    ModelConfig,
+    MoEConfig,
+    RGLRUConfig,
+    RunConfig,
+    SSMConfig,
+    TrainConfig,
+)

@@ -1,0 +1,16 @@
+from repro.core.kgt_minimax import (  # noqa: F401
+    KGTState,
+    diagnostics,
+    init_state,
+    make_round_step,
+    mean_over_clients,
+)
+from repro.core.minimax import MinimaxProblem  # noqa: F401
+from repro.core.mixing import consensus_error, make_mixer, mix_dense, mix_ring  # noqa: F401
+from repro.core.objectives import (  # noqa: F401
+    adversarial_problem,
+    dro_problem,
+    make_quadratic_data,
+    quadratic_problem,
+)
+from repro.core.topology import mixing_matrix, spectral_gap  # noqa: F401

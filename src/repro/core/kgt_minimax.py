@@ -1,0 +1,219 @@
+"""K-GT-Minimax (Algorithm 1) and its baselines, as pure JAX transforms.
+
+State layout: every variable carries a leading clients dim ``n`` —
+``x: (n, …)`` pytree, ``y: (n, …)``, corrections ``cx, cy`` likewise.  The
+per-client gradient oracle is vmapped over that dim; on the decentralized
+mesh the dim is sharded over the ``clients`` axis so each client's compute
+stays on its own sub-mesh and only mixing communicates across clients.
+
+One ``round_step`` = one communication round of Algorithm 1:
+
+  1. K local steps        x_i -= η_cx (∇x F_i + c_i^x);  y_i += η_cy (∇y F_i + c_i^y)
+  2. correction update    c_i^x += (Δx_i − (WΔx)_i)/(K η_cx)   [line 7; Σ_j(δ−w)Δx_j]
+                          c_i^y −= (Δy_i − (WΔy)_i)/(K η_cy)   [line 8]
+  3. parameter mixing     x_i ← Σ_j w_ij (x_j + η_sx Δx_j)     [line 10]
+                          y_i ← Σ_j w_ij (y_j + η_sy Δy_j)     [line 11]
+
+Baselines (same harness, for Table-1 comparisons):
+  * ``dsgda``      decentralized SGDA: K=1, no tracking  (DM-HSGD-family ancestor)
+  * ``local_sgda`` K local steps + mixing, no tracking   (Fed-Norm-SGDA-like)
+  * ``gt_gda``     Algorithm 1 with K=1                  (GT-GDA-like)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AlgorithmConfig
+from repro.core import mixing as mixing_lib
+from repro.core import topology as topo_lib
+from repro.core.minimax import MinimaxProblem
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KGTState:
+    x: Any          # (n, …) per-client primal variables
+    y: Any          # (n, …) per-client dual variables
+    cx: Any         # (n, …) gradient-tracking correction for x
+    cy: Any         # (n, …) gradient-tracking correction for y
+    round: jnp.ndarray  # scalar int32
+
+
+def _tree_axpy(a: float, x_tree, y_tree):
+    """a * x + y elementwise over pytrees, f32 accumulate, keep y dtype."""
+    return jax.tree.map(
+        lambda x, y: (a * x.astype(jnp.float32) + y.astype(jnp.float32)).astype(y.dtype),
+        x_tree, y_tree)
+
+
+def _tree_sub(x_tree, y_tree):
+    return jax.tree.map(lambda x, y: x - y, x_tree, y_tree)
+
+
+def _tree_scale(a: float, tree):
+    return jax.tree.map(lambda x: (a * x.astype(jnp.float32)).astype(x.dtype), tree)
+
+
+def _replicate(tree, n: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), tree)
+
+
+def init_state(
+    problem: MinimaxProblem,
+    cfg: AlgorithmConfig,
+    key,
+    init_batch=None,
+    init_keys=None,
+) -> KGTState:
+    """Shared x0/y0 across clients; corrections per the paper's initialization
+    c_i = −∇F_i(x0,y0;ξ_i) + (1/n)Σ_j ∇F_j(x0,y0;ξ_j)  (Lemma 8 ⇒ Σ_i c_i = 0).
+    For variants without tracking, corrections are zeros.
+    """
+    n = cfg.num_clients
+    kx, ky, kg = jax.random.split(key, 3)
+    x0 = problem.init_x(kx)
+    y0 = problem.init_y(ky)
+    x = _replicate(x0, n)
+    y = _replicate(y0, n)
+
+    track = cfg.algorithm in ("kgt_minimax", "gt_gda")
+    if track and init_batch is not None:
+        keys = init_keys if init_keys is not None else jax.random.split(kg, n)
+        gx, gy = jax.vmap(problem.grads)(x, y, init_batch, keys)
+        cx = jax.tree.map(lambda g: g.mean(0, keepdims=True) - g, gx)
+        cy = jax.tree.map(lambda g: g.mean(0, keepdims=True) - g, gy)
+    else:
+        cx = jax.tree.map(jnp.zeros_like, x)
+        cy = jax.tree.map(jnp.zeros_like, y)
+    if cfg.correction_dtype != "float32":
+        cd = jnp.dtype(cfg.correction_dtype)
+        cx = jax.tree.map(lambda c: c.astype(cd), cx)
+        cy = jax.tree.map(lambda c: c.astype(cd), cy)
+    return KGTState(x=x, y=y, cx=cx, cy=cy, round=jnp.int32(0))
+
+
+def make_round_step(
+    problem: MinimaxProblem,
+    cfg: AlgorithmConfig,
+    w: Optional[np.ndarray] = None,
+    lr_scale: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+):
+    """Builds round_step(state, batches, keys) -> state.
+
+    ``batches``: pytree with leading dims (K, n, …) — one per (local step,
+    client).  ``keys``: (K, n) PRNG keys.  ``lr_scale``: optional schedule
+    multiplier as a function of the round index.
+    """
+    if cfg.topology_cycle:
+        # time-varying gossip: W selected per round from the cycle
+        ws = jnp.stack([
+            jnp.asarray(topo_lib.mixing_matrix(t, cfg.num_clients), jnp.float32)
+            for t in cfg.topology_cycle])
+        gd = (None if cfg.gossip_dtype in (None, "float32")
+              else jnp.dtype(cfg.gossip_dtype))
+
+        def make_mix(round_idx):
+            w_t = ws[round_idx % len(cfg.topology_cycle)]
+            return lambda tree: mixing_lib.mix_dense(tree, w_t, gossip_dtype=gd)
+    else:
+        if w is None:
+            w = topo_lib.mixing_matrix(cfg.topology, cfg.num_clients)
+        static_mix = mixing_lib.make_mixer(
+            cfg.topology, cfg.mixing_impl, w, cfg.gossip_dtype)
+        make_mix = lambda round_idx: static_mix
+    algo = cfg.algorithm
+    track = algo in ("kgt_minimax", "gt_gda")
+    k_steps = 1 if algo in ("dsgda", "gt_gda") else cfg.local_steps
+    grads_v = jax.vmap(problem.grads)
+
+    def round_step(state: KGTState, batches, keys) -> KGTState:
+        scale = lr_scale(state.round) if lr_scale is not None else 1.0
+        eta_cx = cfg.eta_cx * scale
+        eta_cy = cfg.eta_cy * scale
+        mix = make_mix(state.round)
+
+        def local_step(carry, inp):
+            xx, yy = carry
+            batch_k, key_k = inp
+            gx, gy = grads_v(xx, yy, batch_k, key_k)
+            gx = _tree_axpy(1.0, state.cx, gx) if track else gx   # g + c
+            gy = _tree_axpy(1.0, state.cy, gy) if track else gy
+            xx = _tree_axpy(-eta_cx, gx, xx)
+            yy = _tree_axpy(eta_cy, gy, yy)
+            return (xx, yy), None
+
+        # slice exactly k_steps from the provided K-stacked batch
+        bat = jax.tree.map(lambda b: b[:k_steps], batches)
+        kk = jax.tree.map(lambda b: b[:k_steps], keys)
+        (xk, yk), _ = jax.lax.scan(local_step, (state.x, state.y), (bat, kk))
+
+        dx = _tree_sub(xk, state.x)   # Δx = x^{(t)+K} − x^{(t)}
+        dy = _tree_sub(yk, state.y)
+
+        # Algorithm 1 communicates two quantities per variable per round:
+        # Δ (lines 7-8) and the parameters (lines 10-11).  The faithful
+        # implementation issues two gossips; the "fused_*" variants PACK both
+        # into one collective per leaf (same bytes, half the collective
+        # launches — beyond-paper, bit-identical).
+        if cfg.mixing_impl.startswith("fused"):
+            def pack_mix(delta, base):
+                packed = jax.tree.map(
+                    lambda d, b: jnp.stack([d.astype(jnp.float32),
+                                            b.astype(jnp.float32)], axis=1),
+                    delta, base)
+                mixed = mix(packed)
+                md = jax.tree.map(lambda p: p[:, 0], mixed)
+                mb = jax.tree.map(lambda p: p[:, 1], mixed)
+                return md, mb
+
+            mdx, mx = pack_mix(dx, state.x)
+            mdy, my = pack_mix(dy, state.y)
+        else:
+            mdx, mdy = mix(dx), mix(dy)
+            mx, my = mix(state.x), mix(state.y)
+
+        if track:
+            # c^x += (Δx − WΔx)/(K η_cx) ;  c^y −= (Δy − WΔy)/(K η_cy)
+            cx = _tree_axpy(1.0 / (k_steps * eta_cx), _tree_sub(dx, mdx), state.cx)
+            cy = _tree_axpy(-1.0 / (k_steps * eta_cy), _tree_sub(dy, mdy), state.cy)
+        else:
+            cx, cy = state.cx, state.cy
+
+        # x ← W(x + η_s Δx) = Wx + η_s·WΔx   (second gossip: the parameters)
+        eta_sx = cfg.eta_sx if algo in ("kgt_minimax", "gt_gda") else 1.0
+        eta_sy = cfg.eta_sy if algo in ("kgt_minimax", "gt_gda") else 1.0
+        x_new = _tree_axpy(eta_sx, mdx, mx)
+        y_new = _tree_axpy(eta_sy, mdy, my)
+
+        return KGTState(x=x_new, y=y_new, cx=cx, cy=cy, round=state.round + 1)
+
+    return round_step
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+def mean_over_clients(tree):
+    return jax.tree.map(lambda x: x.mean(0), tree)
+
+
+def diagnostics(problem: MinimaxProblem, state: KGTState):
+    """Exact ‖∇Φ(x̄)‖ (quadratic problems) + consensus errors."""
+    out = {
+        "consensus_x": mixing_lib.consensus_error(state.x),
+        "consensus_y": mixing_lib.consensus_error(state.y),
+        "correction_mean_norm": jnp.sqrt(sum(
+            jnp.sum(jnp.square(l.mean(0))) for l in jax.tree.leaves(state.cx)
+        )),
+    }
+    if problem.phi_grad is not None:
+        xbar = mean_over_clients(state.x)
+        out["phi_grad_norm"] = problem.phi_grad_norm(xbar)
+    return out

@@ -1,0 +1,43 @@
+"""MinimaxProblem: the NC-SC problem abstraction Algorithm 1 optimizes.
+
+A problem supplies per-client value/gradient oracles written for a *single*
+client; the algorithm layer vmaps them over the leading clients dim.  The
+stochastic oracle receives a per-(round, local-step, client) PRNG key and a
+per-client data batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MinimaxProblem:
+    """NC-SC minimax problem  min_x max_y (1/n) Σ_i f_i(x, y)."""
+
+    # init_x(key) -> x pytree ; init_y(key) -> y pytree (shared across clients)
+    init_x: Callable[[Any], Any]
+    init_y: Callable[[Any], Any]
+    # value(x, y, batch, key) -> scalar f_i(x, y; xi).  The client identity
+    # enters through ``batch`` (its data shard) — f_i = f(.; D_i).
+    value: Callable[[Any, Any, Any, Any], Any]
+    # Optional exact diagnostics (available for the synthetic quadratic):
+    # phi_grad(x) -> dPhi/dx of the *global* primal function.
+    phi_grad: Optional[Callable[[Any], Any]] = None
+    # Optional deterministic full-batch gradient oracle (diagnostics).
+    full_grads: Optional[Callable[[Any, Any], Any]] = None
+    mu: float = 1.0
+
+    def grads(self, x, y, batch, key):
+        """(∇x f_i, ∇y f_i) at (x, y) on ``batch`` with noise key ``key``."""
+        gx, gy = jax.grad(self.value, argnums=(0, 1))(x, y, batch, key)
+        return gx, gy
+
+    def phi_grad_norm(self, x) -> Any:
+        assert self.phi_grad is not None, "problem lacks exact Phi oracle"
+        g = self.phi_grad(x)
+        import jax.numpy as jnp
+
+        return jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(g)))

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    DataModel,
+    heterogeneity_index,
+    make_data_model,
+    round_batches,
+    sample_client_batch,
+)

@@ -1,0 +1,1 @@
+from repro.evaluation.metrics import evaluate_clients, group_metrics  # noqa: F401

@@ -1,0 +1,6 @@
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention,
+    fused_cross_entropy,
+    rglru_scan,
+    ssd_scan,
+)

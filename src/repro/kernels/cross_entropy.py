@@ -1,0 +1,102 @@
+"""Fused big-vocab cross-entropy Pallas kernel (TPU target, interpret-mode
+validated).
+
+Computes per-token NLL without ever materializing (N, V) logits: the grid is
+(token_blocks, vocab_blocks); each step does one (BT, d) x (d, BV) MXU tile
+of the head matmul and folds it into online log-sum-exp scratch, capturing
+the label logit when the label falls inside the tile.  VMEM per step:
+BT·d (hidden) + d·BV (weight tile) + (BT, BV) logits tile — the same
+blocking the fused-CE memory fix in ``repro.models.model.chunked_nll`` does
+at the XLA level, here tiled for VMEM/MXU explicitly (this was the single
+largest memory lever found in §Perf: 12.8 -> 5.8 GiB on qwen2 train).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(h_ref, w_ref, lab_ref, nll_ref, m_scr, l_scr, ll_scr, *,
+            block_v, vocab):
+    vi = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        ll_scr[...] = jnp.full_like(ll_scr, NEG_INF)
+
+    h = h_ref[...].astype(jnp.float32)            # (BT, d)
+    w = w_ref[...].astype(jnp.float32)            # (BV, d)
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (BT, BV)
+
+    # mask padded vocab columns
+    col = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(col < vocab, logits, NEG_INF)
+
+    # capture the label logit if it lives in this tile
+    lab = lab_ref[...]                             # (BT,)
+    hit = col == lab[:, None]
+    ll_scr[...] = jnp.maximum(
+        ll_scr[...], jnp.max(jnp.where(hit, logits, NEG_INF), axis=1))
+
+    # online log-sum-exp
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, logits.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    l_scr[...] = l_scr[...] * alpha + jnp.exp(
+        logits - m_cur[:, None]).sum(axis=1)
+    m_scr[...] = m_cur
+
+    @pl.when(vi == nv - 1)
+    def _finish():
+        lse = jnp.log(jnp.maximum(l_scr[...], 1e-30)) + m_scr[...]
+        nll_ref[...] = (lse - ll_scr[...]).astype(nll_ref.dtype)
+
+
+def fused_ce_nd(hidden, weight, labels, *, block_t: int = 128,
+                block_v: int = 512, interpret: bool = True):
+    """hidden: (N, d); weight: (V, d) (tied-embedding layout); labels: (N,).
+    Returns per-token NLL (N,) float32.  N and V are padded to the blocks."""
+    n, d = hidden.shape
+    v = weight.shape[0]
+    bt = min(block_t, n)
+    bv = min(block_v, v)
+    n_pad = (-n) % bt
+    v_pad = (-v) % bv
+    if n_pad:
+        hidden = jnp.pad(hidden, ((0, n_pad), (0, 0)))
+        labels = jnp.pad(labels, (0, n_pad))
+    if v_pad:
+        weight = jnp.pad(weight, ((0, v_pad), (0, 0)))
+    nt = (n + n_pad) // bt
+    nv = (v + v_pad) // bv
+
+    kernel = functools.partial(_kernel, block_v=bv, vocab=v)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),  # running max
+            pltpu.VMEM((bt,), jnp.float32),  # running sum
+            pltpu.VMEM((bt,), jnp.float32),  # label logit
+        ],
+        interpret=interpret,
+    )(hidden, weight, labels)
+    return out[:n]

@@ -1,0 +1,112 @@
+"""Flash attention Pallas kernel (TPU target, validated in interpret mode).
+
+Online-softmax attention with causal and sliding-window masking and native
+GQA (kv heads indexed from the q-head grid coordinate — no kv replication in
+HBM).  Tiling: the grid is (batch*q_heads, q_blocks, kv_blocks); TPU iterates
+the minor-most (kv) dimension sequentially per (head, q-block), so the
+running max/sum/accumulator live in VMEM scratch across kv steps.
+
+Block shapes are (BQ, D) / (BK, D) with D padded to the MXU lane width by the
+wrapper in ``repro.kernels.ops``; BQ = BK = 128 by default (128x128 MXU tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
+            seq_len, block_q, block_k, window, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)          # (BK, D)
+    v = v_ref[0].astype(jnp.float32)          # (BK, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (BQ, BK)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_len                     # padded keys never attend
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # (BQ,)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    # fully-masked rows (early q rows under a window) contribute nothing
+    p = jnp.where(mask, p, 0.0)
+
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q, k, v, *, causal: bool = True, window: int = 0, scale=None,
+    block_q: int = 128, block_k: int = 128, interpret: bool = True,
+):
+    """q: (BH, Sq, D); k, v: (BKV, Sk, D) with BH % BKV == 0 (GQA groups).
+
+    Sq/Sk must be pre-padded to multiples of the block sizes; ``seq_len`` is
+    taken as k's true length (padding handled by callers via the key mask).
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    assert bh % bkv == 0, (bh, bkv)
+    group = bh // bkv
+    scale = (d ** -0.5) if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = sq // block_q
+    nk = sk // block_k
+
+    grid = (bh, nq, nk)
+    kernel = functools.partial(
+        _kernel, scale=scale, seq_len=sk, block_q=block_q, block_k=block_k,
+        window=window, causal=causal)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max
+            pltpu.VMEM((block_q,), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, d), jnp.float32), # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

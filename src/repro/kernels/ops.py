@@ -1,0 +1,97 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+Callers use model-layout tensors ((B, S, H, D) attention, (B, S, H, P) SSD);
+these wrappers handle layout, GQA folding, block padding and the
+pallas/interpret/xla backend choice.  On this CPU container the kernels run
+in interpret mode for validation; ``backend="xla"`` routes to the pure-jnp
+oracle (what the dry-run lowers); on real TPU ``interpret=False`` compiles
+the kernels proper.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref as ref_lib
+from repro.kernels import rglru_scan as rg
+from repro.kernels import ssd_scan as ssd
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "backend", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: str = "interpret", block_q: int = 128,
+                    block_k: int = 128):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D).  Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    if backend == "xla":
+        of = ref_lib.attention_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        qp, _ = _pad_to(qf, 1, block_q)
+        kp, _ = _pad_to(kf, 1, block_k)
+        vp, _ = _pad_to(vf, 1, block_k)
+        of = fa.flash_attention_bhsd(
+            qp, kp, vp, causal=causal, window=window, block_q=block_q,
+            block_k=block_k, interpret=(backend == "interpret"))
+        of = of[:, :sq]
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk", "backend"))
+def ssd_scan(xdt, loga, bm, cm, *, chunk: int = 64, backend: str = "interpret"):
+    """xdt: (B, S, H, P); loga: (B, S, H); bm, cm: (B, S, N)."""
+    b, s, h, p = xdt.shape
+    xf = xdt.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    lf = loga.transpose(0, 2, 1).reshape(b * h, s)
+    if backend == "xla":
+        yf = ref_lib.ssd_ref(xf, lf, bm, cm)
+    else:
+        xf2, _ = _pad_to(xf, 1, chunk)
+        lf2, _ = _pad_to(lf, 1, chunk)
+        bm2, _ = _pad_to(bm, 1, chunk)
+        cm2, _ = _pad_to(cm, 1, chunk)
+        yf = ssd.ssd_scan_bh(xf2, lf2, bm2, cm2, chunk=chunk,
+                             interpret=(backend == "interpret"))[:, :s]
+    return yf.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_v", "backend"))
+def fused_cross_entropy(hidden, weight, labels, *, block_t: int = 128,
+                        block_v: int = 512, backend: str = "interpret"):
+    """Per-token NLL without materializing (N, V) logits.
+    hidden: (N, d); weight: (V, d); labels: (N,) int32."""
+    if backend == "xla":
+        return ref_lib.fused_ce_ref(hidden, weight, labels)
+    from repro.kernels import cross_entropy as ce
+
+    return ce.fused_ce_nd(hidden, weight, labels, block_t=block_t,
+                          block_v=block_v, interpret=(backend == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("chunk", "backend"))
+def rglru_scan(a, u, *, chunk: int = 256, backend: str = "interpret"):
+    """a, u: (B, S, W) -> h: (B, S, W)."""
+    if backend == "xla":
+        return ref_lib.rglru_ref(a, u)
+    s = a.shape[1]
+    a2, _ = _pad_to(a, 1, chunk)
+    u2, _ = _pad_to(u, 1, chunk)
+    # padded a=0 keeps the carry exact for the real rows
+    return rg.rglru_scan_b(a2, u2, chunk=chunk,
+                           interpret=(backend == "interpret"))[:, :s]

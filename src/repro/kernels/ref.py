@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (token-by-token recurrences and
+naive attention) — the ground truth the kernels are allclose-tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0, scale=None):
+    """q: (BH, Sq, D); k, v: (BKV, Sk, D); GQA by head-group replication."""
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    group = bh // bkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(xdt, loga, bm, cm):
+    """Token-by-token SSD recurrence.  xdt: (BH,S,P); loga: (BH,S);
+    bm, cm: (B,S,N).  Returns y: (BH,S,P)."""
+    bh, s, p = xdt.shape
+    b, _, n = bm.shape
+    heads = bh // b
+    bmr = jnp.repeat(bm, heads, axis=0)
+    cmr = jnp.repeat(cm, heads, axis=0)
+
+    def step(state, inp):
+        x_t, la_t, b_t, c_t = inp
+        state = jnp.exp(la_t)[:, None, None] * state + jnp.einsum(
+            "bp,bn->bpn", x_t.astype(jnp.float32), b_t.astype(jnp.float32))
+        y_t = jnp.einsum("bn,bpn->bp", c_t.astype(jnp.float32), state)
+        return state, y_t
+
+    state0 = jnp.zeros((bh, p, n), jnp.float32)
+    xs = (xdt.swapaxes(0, 1), loga.swapaxes(0, 1),
+          bmr.swapaxes(0, 1), cmr.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(xdt.dtype)
+
+
+def fused_ce_ref(hidden, weight, labels):
+    """Plain CE oracle: logits = hidden @ weight.T; NLL per token."""
+    logits = hidden.astype(jnp.float32) @ weight.astype(jnp.float32).T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+
+
+def rglru_ref(a, u):
+    """Token-by-token h_t = a_t h_{t-1} + u_t.  a, u: (B,S,W)."""
+
+    def step(h, inp):
+        a_t, u_t = inp
+        h = a_t * h + u_t
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(
+        step, h0, (a.swapaxes(0, 1).astype(jnp.float32),
+                   u.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1).astype(a.dtype)

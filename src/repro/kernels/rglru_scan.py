@@ -1,0 +1,61 @@
+"""RG-LRU linear-recurrence Pallas kernel (TPU target, interpret-validated).
+
+h_t = a_t * h_{t-1} + u_t over (B, S, W), chunked: grid (B, n_chunks) with the
+carry h (W,) in VMEM scratch; within a chunk a log-depth Blelloch-style
+doubling scan over the (L, W) tile (vector ops on W lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, u_ref, h_ref, h_scr, *, length):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)  # (L, W)
+    u = u_ref[0].astype(jnp.float32)  # (L, W)
+    # fold carry into the first element
+    u = u.at[0].add(a[0] * h_scr[...])
+
+    # inclusive scan of the affine maps (a, u) by doubling:
+    # (a, u)_t <- (a_t * a_{t-s}, a_t * u_{t-s} + u_t) for s = 1,2,4,...
+    s = 1
+    while s < length:
+        a_sh = jnp.pad(a, ((s, 0), (0, 0)), constant_values=1.0)[:length]
+        u_sh = jnp.pad(u, ((s, 0), (0, 0)))[:length]
+        u = a * u_sh + u
+        a = a * a_sh
+        s *= 2
+
+    h_ref[0] = u.astype(h_ref.dtype)  # u now holds h_t
+    h_scr[...] = u[-1]
+
+
+def rglru_scan_b(a, u, *, chunk: int = 256, interpret: bool = True):
+    """a, u: (B, S, W); returns h: (B, S, W).  S must divide by chunk."""
+    b, s, w = a.shape
+    l = min(chunk, s)
+    nc = s // l
+    grid = (b, nc)
+    kernel = functools.partial(_kernel, length=l)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, l, w), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, l, w), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((w,), jnp.float32)],
+        interpret=interpret,
+    )(a, u)

@@ -1,0 +1,89 @@
+"""Mamba2 SSD chunked-scan Pallas kernel (TPU target, interpret-validated).
+
+Grid: (batch*heads, n_chunks) — TPU iterates chunks sequentially per (b,h),
+so the inter-chunk SSM state (P, N) lives in VMEM scratch.  Each step does
+the intra-chunk dual (matmul) form on an (L, P) x (L, N) tile:
+
+    cum_t   = cumsum(loga)                       (L,)
+    scores  = exp(cum_t - cum_u) (C_t.B_u) [u<=t] (L, L)
+    y       = scores @ xdt + exp(cum) * (C @ state^T)
+    state   = exp(cum_L) state + ((exp(cum_L - cum) * xdt)^T @ B)
+
+VMEM per step: L*(P+2N) inputs + (P,N) state + (L,L) scores — with L=64,
+P=64, N=128 well under the ~16 MB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xdt_ref, loga_ref, b_ref, c_ref, y_ref, state_scr, *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0].astype(jnp.float32)    # (L, P)
+    loga = loga_ref[0].astype(jnp.float32)  # (L,)
+    bm = b_ref[0].astype(jnp.float32)       # (L, N)
+    cm = c_ref[0].astype(jnp.float32)       # (L, N)
+    state = state_scr[...]                  # (P, N)
+
+    cum = jnp.cumsum(loga)                  # (L,) inclusive
+    rel = cum[:, None] - cum[None, :]       # (L, L)
+    l = xdt.shape[0]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (l, l), 1)
+    decay = jnp.where(tri, jnp.exp(rel), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    scores = decay * cb
+    y_intra = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (L, P)
+    # inter-chunk: y_inter[t] = exp(cum_t) * C_t . state  -> (L, P)
+    c_state = jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (L, P)
+    y = y_intra + jnp.exp(cum)[:, None] * c_state
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S <- exp(cum_L) S + sum_u exp(cum_L - cum_u) xdt_u (x) B_u
+    dec_end = jnp.exp(cum[-1] - cum)        # (L,)
+    xw = xdt * dec_end[:, None]             # (L, P)
+    s_chunk = jax.lax.dot_general(xw, bm, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = jnp.exp(cum[-1]) * state + s_chunk
+
+
+def ssd_scan_bh(xdt, loga, bm, cm, *, chunk: int = 64, interpret: bool = True):
+    """xdt: (BH, S, P); loga: (BH, S); bm, cm: (B, S, N) broadcast per head
+    via index maps (heads of one batch share B/C).  S must divide by chunk.
+    Returns y: (BH, S, P) plus NO final state (training path)."""
+    bh, s, p = xdt.shape
+    b = bm.shape[0]
+    assert bh % b == 0
+    heads = bh // b
+    l = min(chunk, s)
+    nc = s // l
+    grid = (bh, nc)
+
+    kernel = functools.partial(_kernel, chunk=l)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, l), lambda i, j: (i, j)),
+            pl.BlockSpec((1, l, bm.shape[-1]), lambda i, j, h=heads: (i // h, j, 0)),
+            pl.BlockSpec((1, l, cm.shape[-1]), lambda i, j, h=heads: (i // h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, l, p), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((p, bm.shape[-1]), jnp.float32)],
+        interpret=interpret,
+    )(xdt, loga, bm, cm)

@@ -1,0 +1,102 @@
+"""Serving driver: batched prefill + decode on the production mesh.
+
+On real hardware this binds the AOT-compiled steps from
+``repro.launch.steps`` to live buffers; on this CPU container use
+``--local`` for a single-device demo on a reduced config (the multi-chip
+path is exercised AOT by ``repro.launch.dryrun``).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --local
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import InputShape
+from repro.configs.shapes import SHAPES
+
+
+def serve_local(arch: str, batch: int, prompt_len: int, gen_tokens: int,
+                temperature: float) -> None:
+    from repro.models import decode_step, init_cache, init_params
+
+    cfg = registry.reduced(registry.get_model_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    total = prompt_len + gen_tokens
+    shape = ((batch, prompt_len, cfg.num_codebooks) if cfg.num_codebooks
+             else (batch, prompt_len))
+    prompt = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    caches = init_cache(cfg, batch, total)
+
+    step = jax.jit(
+        lambda p, c, t, pos: decode_step(p, c, t, pos, cfg),
+        donate_argnums=(1,))
+    logits = None
+    t0 = time.time()
+    for t in range(prompt_len):
+        logits, caches = step(params, caches, prompt[:, t:t+1], jnp.int32(t))
+    print(f"[serve] prefill {prompt_len} tok x {batch} seq: {time.time()-t0:.2f}s")
+    t0 = time.time()
+    for i in range(gen_tokens):
+        key, ks = jax.random.split(key)
+        tok = jax.random.categorical(
+            ks, logits[:, -1].astype(jnp.float32) / temperature, axis=-1)
+        tok = tok[:, None] if not cfg.num_codebooks else tok[:, None, :]
+        logits, caches = step(params, caches, tok, jnp.int32(prompt_len + i))
+    dt = time.time() - t0
+    print(f"[serve] decoded {gen_tokens} tok/seq in {dt:.2f}s "
+          f"({gen_tokens * batch / dt:.1f} tok/s aggregate)")
+
+
+def serve_production(arch: str, shape_name: str, multi_pod: bool) -> None:
+    """AOT-compile the serving steps against the production mesh and report
+    the binding points (a real deployment feeds live params/caches here)."""
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import steps as steps_lib
+
+    cfg = registry.get_model_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    with jax.set_mesh(mesh):
+        if shape.kind == "prefill":
+            jitted, p_sds, b_sds, c_sds = steps_lib.build_prefill_step(
+                cfg, shape, mesh)
+            compiled = jitted.lower(p_sds, b_sds, c_sds).compile()
+        else:
+            cfg2 = steps_lib.long_context_variant(cfg) \
+                if shape.name == "long_500k" else cfg
+            jitted, p_sds, c_sds, t_sds, pos_sds = steps_lib.build_decode_step(
+                cfg2, shape, mesh)
+            compiled = jitted.lower(p_sds, c_sds, t_sds, pos_sds).compile()
+    mem = compiled.memory_analysis()
+    print(f"[serve] {arch} x {shape_name} compiled for "
+          f"{dict(zip(mesh.axis_names, mesh.devices.shape))}; "
+          f"peak/device ≈ {(mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes - mem.alias_size_in_bytes)/2**30:.2f} GiB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--shape", default="decode_32k",
+                    choices=[s for s in SHAPES if s != "train_4k"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args()
+    if args.local:
+        serve_local(args.arch, args.batch, args.prompt_len, args.tokens,
+                    args.temperature)
+    else:
+        serve_production(args.arch, args.shape, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    param_count,
+    per_group_loss,
+    token_losses,
+)

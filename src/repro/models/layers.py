@@ -1,0 +1,61 @@
+"""Core layers: initializers, RMSNorm, RoPE, SwiGLU MLP — pure functional JAX."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32):
+    """LeCun-normal-ish init, fan-in along ``in_axis``."""
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, dtype) * (1.0 / jnp.sqrt(fan_in))
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # (...,S,1,D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(params, x, compute_dtype=jnp.bfloat16):
+    w = lambda p: p.astype(compute_dtype)
+    h = jax.nn.silu(x @ w(params["gate"])) * (x @ w(params["up"]))
+    return h @ w(params["down"])

@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t)          (recurrence gate)
+    i_t = sigmoid(W_x x_t)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+computed chunk-wise: lax.scan over chunks, associative scan within a chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg, d_model: int):
+    r = cfg.rglru
+    w = r.lru_width or d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(k1, (d_model, w), in_axis=0),
+        "in_gate": dense_init(k2, (d_model, w), in_axis=0),
+        "conv_w": dense_init(k3, (r.conv_width, w), in_axis=0) * 0.1,
+        "conv_b": jnp.zeros((w,)),
+        "wa": dense_init(k4, (w, w), in_axis=0),
+        "ba": jnp.zeros((w,)),
+        "wx": dense_init(k5, (w, w), in_axis=0),
+        "bx": jnp.zeros((w,)),
+        # softplus(lambda) ~ 0.2..0.99 decay range init
+        "lam": jnp.linspace(0.5, 4.0, w),
+        "out": dense_init(k6, (w, d_model), in_axis=0),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + b
+    return y, (xp[:, -(k - 1) :, :] if k > 1 else None)
+
+
+def rglru_scan(a, u, h0=None, chunk: int = 256):
+    """Linear recurrence h_t = a_t h_{t-1} + u_t.  a,u: (B,S,W) float32."""
+    b, s, w = a.shape
+    l = min(chunk, s)
+    nc = -(-s // l)
+    pad = nc * l - s
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    a = a.reshape(b, nc, l, w).transpose(1, 0, 2, 3)
+    u = u.reshape(b, nc, l, w).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    def combine(x, y):
+        (ax, ux), (ay, uy) = x, y
+        return ax * ay, ay * ux + uy
+
+    def step(h, inp):
+        ac, uc = inp
+        # prepend the carry as an initial element
+        a_all, u_all = combine((jnp.ones_like(ac[:, :1]), h[:, None]),
+                               (ac[:, :1], uc[:, :1]))
+        a0 = jnp.concatenate([a_all, ac[:, 1:]], axis=1)
+        u0 = jnp.concatenate([u_all, uc[:, 1:]], axis=1)
+        _, hs = jax.lax.associative_scan(combine, (a0, u0), axis=1)
+        return hs[:, -1], hs
+
+    h_fin, ys = jax.lax.scan(step, h0, (a, u))
+    h = ys.transpose(1, 0, 2, 3).reshape(b, nc * l, w)
+    return h[:, :s], h_fin
+
+
+def rglru_forward(params, x, cfg, compute_dtype=jnp.bfloat16, conv_state=None,
+                  h_state=None, decode: bool = False):
+    """RG-LRU block.  x: (B,S,d).  Returns (out, cache)."""
+    w_ = lambda p: p.astype(compute_dtype)
+    xb = x @ w_(params["in_x"])
+    gate = jax.nn.gelu(x @ w_(params["in_gate"]))
+    xb, new_conv = _conv1d(xb, w_(params["conv_w"]), w_(params["conv_b"]), conv_state)
+
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"] + params["ba"])
+    i = jax.nn.sigmoid(xf @ params["wx"] + params["bx"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    u = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * xf)
+
+    if decode:
+        h0 = h_state if h_state is not None else jnp.zeros(
+            (x.shape[0], xb.shape[-1]), jnp.float32)
+        h_new = a[:, 0] * h0 + u[:, 0]
+        h = h_new[:, None]
+        h_fin = h_new
+    else:
+        h, h_fin = rglru_scan(a, u, h_state)
+
+    y = h.astype(compute_dtype) * gate
+    out = y @ w_(params["out"])
+    return out.astype(x.dtype), {"conv": new_conv, "h": h_fin}

@@ -1,0 +1,152 @@
+"""Mamba2 (SSD — state-space duality) block, pure-jnp chunked implementation.
+
+The recurrence per head h with state S in R^{P x N}:
+    S_t = a_t * S_{t-1} + (dt_t * x_t) outer B_t          a_t = exp(A_h * dt_t)
+    y_t = C_t . S_t + D_h * x_t
+evaluated chunk-parallel (intra-chunk matmul form + inter-chunk scan), exactly
+the SSD algorithm of arXiv:2405.21060 — which is also the structure the Pallas
+kernel (`repro.kernels.ssd_scan`) tiles for VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_ssm(key, cfg, d_model: int):
+    s = cfg.ssm
+    d_in = s.expand * d_model
+    nheads = d_in // s.d_head
+    conv_ch = d_in + 2 * s.d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": dense_init(k1, (d_model, 2 * d_in + 2 * s.d_state + nheads), in_axis=0),
+        "conv_w": dense_init(k2, (s.d_conv, conv_ch), in_axis=0) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)),
+        "D": jnp.ones((nheads,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nheads,), 0.01))),  # softplus^-1
+        "norm": jnp.zeros((d_in,)),
+        "out_proj": dense_init(k3, (d_in, d_model), in_axis=0),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B,S,C); w: (K,C).  state: (B,K-1,C) carry
+    (decode).  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(xdt, loga, Bm, Cm, chunk: int, state0=None):
+    """Chunk-parallel SSD scan.
+
+    xdt:  (B,S,H,P)  inputs pre-multiplied by dt
+    loga: (B,S,H)    log decay per token/head
+    Bm,Cm:(B,S,N)    input/output projections (single group)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = xdt.shape
+    n = Bm.shape[-1]
+    l = min(chunk, s)
+    nc = -(-s // l)
+    pad = nc * l - s
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    xdt = xdt.reshape(b, nc, l, h, p).transpose(1, 0, 2, 3, 4)
+    loga = loga.reshape(b, nc, l, h).transpose(1, 0, 2, 3)
+    Bm = Bm.reshape(b, nc, l, n).transpose(1, 0, 2, 3)
+    Cm = Cm.reshape(b, nc, l, n).transpose(1, 0, 2, 3)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xc, lac, bc, cc = inp  # (B,l,H,P), (B,l,H), (B,l,N), (B,l,N)
+        cum = jnp.cumsum(lac.astype(jnp.float32), axis=1)  # (B,l,H) inclusive
+        # intra-chunk: scores[t,u] = exp(cum_t - cum_u) * (C_t . B_u) * [u <= t]
+        rel = cum[:, :, None, :] - cum[:, None, :, :]  # (B,t,u,H)
+        maskv = jnp.tril(jnp.ones((l, l), bool))[None, :, :, None]
+        decay = jnp.where(maskv, jnp.exp(rel), 0.0)
+        cb = jnp.einsum("btn,bun->btu", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        scores = decay * cb[:, :, :, None]  # (B,t,u,H)
+        y_intra = jnp.einsum("btuh,buhp->bthp", scores, xc.astype(jnp.float32))
+        # inter-chunk contribution from carried state
+        y_inter = jnp.einsum(
+            "btn,bhpn,bth->bthp", cc.astype(jnp.float32), state, jnp.exp(cum)
+        )
+        # chunk state update
+        last = cum[:, -1:, :]  # (B,1,H)
+        dec_to_end = jnp.exp(last - cum)  # (B,l,H)
+        s_chunk = jnp.einsum(
+            "blh,blhp,bln->bhpn", dec_to_end, xc.astype(jnp.float32),
+            bc.astype(jnp.float32),
+        )
+        new_state = jnp.exp(last[:, 0, :])[:, :, None, None] * state + s_chunk
+        return new_state, (y_intra + y_inter).astype(xdt.dtype)
+
+    final, ys = jax.lax.scan(step, state0, (xdt, loga, Bm, Cm))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * l, h, p)
+    return y[:, :s], final
+
+
+def ssm_forward(params, x, cfg, compute_dtype=jnp.bfloat16, conv_state=None,
+                ssd_state=None, decode: bool = False):
+    """Mamba2 block.  x: (B,S,d).  Returns (out, new_cache | None)."""
+    s = cfg.ssm
+    d = x.shape[-1]
+    d_in = s.expand * d
+    nheads = d_in // s.d_head
+    n = s.d_state
+    w = lambda p: p.astype(compute_dtype)
+
+    proj = x @ w(params["in_proj"])
+    z, xb, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xb, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, w(params["conv_w"]), w(params["conv_b"]), conv_state
+    )
+    xb, Bm, Cm = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])  # (H,)
+    loga = a * dt  # (B,S,H)
+    xh = xb.reshape(*xb.shape[:-1], nheads, s.d_head)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+
+    if decode:
+        # single step: S <- exp(loga) S + xdt outer B ; y = C . S
+        state = ssd_state if ssd_state is not None else jnp.zeros(
+            (x.shape[0], nheads, s.d_head, n), jnp.float32
+        )
+        aa = jnp.exp(loga[:, 0])  # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xdt[:, 0], Bm[:, 0].astype(jnp.float32))
+        state = aa[..., None, None] * state + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), state)[:, None]
+        new_ssd = state
+    else:
+        y, new_ssd = ssd_chunked(xdt, loga, Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32), s.chunk, ssd_state)
+
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:-2], d_in).astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = y @ w(params["out_proj"])
+    cache = {"conv": new_conv, "state": new_ssd}
+    return out.astype(x.dtype), cache

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, adam, get_optimizer, momentum, sgd  # noqa: F401
+from repro.optim.schedules import constant, cosine, get_schedule, wsd  # noqa: F401

@@ -1,0 +1,76 @@
+"""Minimal optimizer library (no optax in this environment).
+
+Optimizers are (init, update) pairs over pytrees — ``update`` returns
+(new_params, new_state).  Algorithm 1's faithful local update is plain SGD;
+``momentum``/``adam`` are available as beyond-paper inner optimizers and for
+the standalone (non-federated) training driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], tuple]  # (grads, state, params, lr)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        m = jax.tree.map(lambda s, g: beta * s + g.astype(jnp.float32), state, grads)
+        new = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype), params, m)
+        return new, m
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda s, g: b1 * s + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda s, g: b2 * s + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mh = 1.0 - b1 ** t.astype(jnp.float32)
+        vh = 1.0 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, mm, vv: (
+                p.astype(jnp.float32) - lr * (mm / mh) / (jnp.sqrt(vv / vh) + eps)
+            ).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adam": adam}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)

@@ -1,0 +1,43 @@
+"""Learning-rate schedules (round-indexed): constant, cosine, and WSD
+(warmup–stable–decay, the MiniCPM schedule, arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(total_rounds: int, warmup: int = 0):
+    def fn(t):
+        t = jnp.asarray(t, jnp.float32)
+        return jnp.minimum(1.0, (t + 1) / jnp.maximum(warmup, 1)) if warmup else jnp.ones(())
+    return fn
+
+
+def cosine(total_rounds: int, warmup: int = 0, floor: float = 0.1):
+    def fn(t):
+        t = jnp.asarray(t, jnp.float32)
+        wu = jnp.minimum(1.0, (t + 1) / jnp.maximum(warmup, 1))
+        prog = jnp.clip((t - warmup) / jnp.maximum(total_rounds - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return wu * cos
+    return fn
+
+
+def wsd(total_rounds: int, warmup: int = 0, decay_start_frac: float = 0.8,
+        floor: float = 0.1):
+    """Warmup -> stable (lr=1) -> exponential-ish decay in the last
+    (1-decay_start_frac) fraction of training."""
+    def fn(t):
+        t = jnp.asarray(t, jnp.float32)
+        wu = jnp.minimum(1.0, (t + 1) / jnp.maximum(warmup, 1))
+        start = decay_start_frac * total_rounds
+        prog = jnp.clip((t - start) / jnp.maximum(total_rounds - start, 1), 0.0, 1.0)
+        decay = floor ** prog  # 1 -> floor geometrically
+        return wu * jnp.where(t < start, 1.0, decay)
+    return fn
+
+
+SCHEDULES = {"constant": constant, "cosine": cosine, "wsd": wsd}
+
+
+def get_schedule(name: str, total_rounds: int, warmup: int = 0, **kw):
+    return SCHEDULES[name](total_rounds, warmup, **kw)

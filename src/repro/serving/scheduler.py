@@ -1,0 +1,157 @@
+"""Continuous-batching serving loop.
+
+A fixed pool of decode slots is stepped in lockstep (one jit'd decode step
+per tick, the shape the decode dry-runs lower); a scheduler admits queued
+requests into free slots between ticks, prefills them token-by-token into
+the slot's cache region, and retires sequences on EOS/length.  This is the
+vLLM-style iteration-level scheduling pattern, shaped for jit: static slot
+count, static cache length, per-slot position/active masks as device arrays.
+
+The batch dimension is the slot pool, so on the production mesh it shards
+over the data axes exactly like the decode dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (P,) or (P, ncb)
+    max_new_tokens: int
+    temperature: float = 1.0
+    eos_token: Optional[int] = None
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    pos: int = 0                  # next absolute position to write
+    prompt_cursor: int = 0        # tokens of the prompt already consumed
+    generated: List = dataclasses.field(default_factory=list)
+
+
+class ServingEngine:
+    """Lockstep continuous-batching engine over ``num_slots`` sequences."""
+
+    def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 4,
+                 max_len: int = 512, rng: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.caches = model_lib.init_cache(cfg, num_slots, max_len)
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self.key = jax.random.PRNGKey(rng)
+        self._tick = 0
+
+        ncb = cfg.num_codebooks
+
+        def step(params, caches, tokens, pos_vec, key, temps):
+            # Each slot decodes at its OWN position: vmap over the cache batch
+            # axis (axis 1 of every cache leaf) with a per-slot pos scalar.
+            def one(p, c, t, pos):
+                c1 = jax.tree.map(lambda x: x[:, None], c)  # reinsert batch=1
+                logits, nc = model_lib.decode_step(p, c1, t[None], pos, self.cfg)
+                return logits[0], jax.tree.map(lambda x: x[:, 0], nc)
+
+            logits, new_caches = jax.vmap(
+                one, in_axes=(None, 1, 0, 0), out_axes=(0, 1))(
+                params, caches, tokens, pos_vec)
+            flat = logits[:, -1].astype(jnp.float32)
+            t_b = temps.reshape((-1,) + (1,) * (flat.ndim - 1))
+            sampled = jax.random.categorical(key, flat / t_b, axis=-1)
+            return sampled, new_caches
+
+        self._step = jax.jit(step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.request is None and self.queue:
+                req = self.queue.pop(0)
+                slot.request = req
+                slot.pos = 0
+                slot.prompt_cursor = 0
+                slot.generated = []
+
+    def _next_tokens(self):
+        """Next input token per slot: prompt token (prefill phase) or the
+        last sampled token (decode phase); idle slots feed token 0."""
+        toks = []
+        for slot in self.slots:
+            if slot.request is None:
+                toks.append(np.zeros(self._tok_shape(), np.int32))
+            elif slot.prompt_cursor < len(slot.request.prompt):
+                toks.append(np.asarray(
+                    slot.request.prompt[slot.prompt_cursor], np.int32))
+            else:
+                toks.append(np.asarray(slot.generated[-1], np.int32))
+        return jnp.asarray(np.stack(toks))[:, None] if not self.cfg.num_codebooks \
+            else jnp.asarray(np.stack(toks))[:, None, :]
+
+    def _tok_shape(self):
+        return (self.cfg.num_codebooks,) if self.cfg.num_codebooks else ()
+
+    # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """One lockstep decode step across all slots; returns #active."""
+        self._admit()
+        active = [s for s in self.slots if s.request is not None]
+        if not active:
+            return 0
+        tokens = self._next_tokens()
+        pos_vec = jnp.asarray([s.pos for s in self.slots], jnp.int32)
+        temps = jnp.asarray(
+            [s.request.temperature if s.request else 1.0 for s in self.slots],
+            jnp.float32)
+        self.key, ks = jax.random.split(self.key)
+        sampled, self.caches = self._step(
+            self.params, self.caches, tokens, pos_vec, ks, temps)
+        sampled = np.asarray(sampled)
+
+        for i, slot in enumerate(self.slots):
+            req = slot.request
+            if req is None:
+                continue
+            in_prefill = slot.prompt_cursor < len(req.prompt)
+            slot.pos += 1
+            if in_prefill:
+                slot.prompt_cursor += 1
+                if slot.prompt_cursor == len(req.prompt):
+                    slot.generated.append(sampled[i])  # first real sample
+            else:
+                slot.generated.append(sampled[i])
+            done_len = len(slot.generated) >= req.max_new_tokens
+            done_eos = (req.eos_token is not None and slot.generated
+                        and np.all(slot.generated[-1] == req.eos_token))
+            done_cap = slot.pos >= self.max_len - 1
+            if (not in_prefill or slot.prompt_cursor == len(req.prompt)) and (
+                    done_len or done_eos or done_cap):
+                req.output = np.stack(slot.generated)
+                self.done[req.uid] = req
+                slot.request = None
+        self._tick += 1
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_ticks):
+            if not self.tick() and not self.queue:
+                break
+        return self.done

@@ -1,0 +1,45 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest, load_metadata, restore, save
+from repro.core.kgt_minimax import KGTState
+
+
+def _state():
+    return KGTState(
+        x={"w": jnp.arange(6.0).reshape(2, 3)},
+        y=jnp.ones((2, 4)),
+        cx={"w": jnp.zeros((2, 3))},
+        cy=jnp.zeros((2, 4)),
+        round=jnp.int32(7),
+    )
+
+
+def test_roundtrip(tmp_path):
+    st = _state()
+    path = str(tmp_path / "ck.npz")
+    save(path, st, metadata={"round": 7})
+    template = jax.tree.map(jnp.zeros_like, st)
+    back = restore(path, template)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert load_metadata(path)["round"] == 7
+
+
+def test_shape_mismatch_raises(tmp_path):
+    st = _state()
+    path = str(tmp_path / "ck.npz")
+    save(path, st)
+    bad = KGTState(x={"w": jnp.zeros((3, 3))}, y=st.y, cx=st.cx, cy=st.cy,
+                   round=st.round)
+    with pytest.raises(ValueError):
+        restore(path, bad)
+
+
+def test_latest(tmp_path):
+    assert latest(str(tmp_path)) is None
+    for name in ("round_000001.npz", "round_000010.npz"):
+        save(str(tmp_path / name), {"a": jnp.zeros(1)})
+    assert latest(str(tmp_path)).endswith("round_000010.npz")

@@ -1,0 +1,57 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_model_config, reduced
+from repro.data import (
+    heterogeneity_index,
+    make_data_model,
+    round_batches,
+    sample_client_batch,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_batch_shapes_and_ranges():
+    dm = make_data_model(KEY, vocab_size=512, num_groups=8, num_clients=4, alpha=0.3)
+    b = sample_client_batch(dm, KEY, client=1, batch=3, seq_len=16)
+    assert b["tokens"].shape == (3, 16)
+    assert b["labels"].shape == (3, 16)
+    assert b["groups"].shape == (3, 16)
+    assert int(b["tokens"].max()) < 512 and int(b["tokens"].min()) >= 0
+    assert int(b["groups"].max()) < 8
+
+
+def test_codebook_batch():
+    dm = make_data_model(KEY, vocab_size=128, num_groups=4, num_clients=2)
+    b = sample_client_batch(dm, KEY, client=0, batch=2, seq_len=8, num_codebooks=4)
+    assert b["tokens"].shape == (2, 8, 4)
+    assert b["labels"].shape == (2, 8, 4)
+
+
+def test_heterogeneity_monotonic_in_alpha():
+    his = []
+    for alpha in (0.05, 0.5, 50.0):
+        dm = make_data_model(KEY, vocab_size=128, num_groups=8, num_clients=8,
+                             alpha=alpha)
+        his.append(heterogeneity_index(dm))
+    assert his[0] > his[1] > his[2]
+
+
+def test_round_batches_stacked_shapes():
+    cfg = reduced(get_model_config("internvl2-76b"))
+    dm = make_data_model(KEY, vocab_size=cfg.vocab_size, num_groups=4,
+                         num_clients=3)
+    rb = round_batches(dm, KEY, local_steps=2, num_clients=3,
+                       per_client_batch=2, seq_len=8, cfg=cfg)
+    assert rb["tokens"].shape == (2, 3, 2, 8)
+    assert rb["prefix"].shape == (2, 3, 2, cfg.num_prefix_tokens, cfg.d_model)
+
+
+def test_determinism():
+    dm = make_data_model(KEY, vocab_size=64, num_groups=4, num_clients=2)
+    a = sample_client_batch(dm, KEY, 0, 2, 8)
+    b = sample_client_batch(dm, KEY, 0, 2, 8)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])

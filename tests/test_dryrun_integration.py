@@ -1,0 +1,30 @@
+"""Integration test of the multi-pod dry-run machinery (subprocess: the
+XLA host-device-count flag must be set before jax init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_single_pair(tmp_path):
+    out = tmp_path / "dry.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--archs", "qwen2-0.5b", "--shapes", "decode_32k",
+         "--meshes", "single", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    recs = [json.loads(l) for l in open(out)]
+    assert len(recs) == 1
+    r = recs[0]
+    assert "error" not in r, r.get("error")
+    assert r["mesh_shape"] == {"data": 16, "model": 16}
+    assert r["memory"]["peak_per_device"] > 0
+    assert r["cost"]["dot_flops"] > 0
+    assert r["compile_s"] > 0

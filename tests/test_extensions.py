@@ -1,0 +1,146 @@
+"""Tests for the beyond-deliverable extensions: continuous-batching serving,
+dropless sorted MoE dispatch, evaluation metrics, bf16 tracking state, and
+time-varying gossip topologies."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AlgorithmConfig
+from repro.configs.registry import get_model_config, reduced
+from repro.core import (
+    diagnostics,
+    init_state,
+    make_quadratic_data,
+    make_round_step,
+    quadratic_problem,
+)
+from repro.data import make_data_model, sample_client_batch
+from repro.evaluation import group_metrics
+from repro.models import init_params
+from repro.models import moe as moe_lib
+from repro.serving import Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+
+def test_serving_engine_continuous_batching():
+    cfg = reduced(get_model_config("qwen2-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, num_slots=2, max_len=48)
+    rng = np.random.default_rng(0)
+    for uid in range(4):  # 4 requests through 2 slots => recycling
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                           max_new_tokens=3))
+    done = eng.run(max_ticks=200)
+    assert sorted(done) == [0, 1, 2, 3]
+    for r in done.values():
+        assert r.output.shape == (3,)
+        assert (r.output >= 0).all() and (r.output < cfg.vocab_size).all()
+
+
+def test_serving_engine_respects_max_len():
+    cfg = reduced(get_model_config("mamba2-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, num_slots=1, max_len=12)
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=100))
+    done = eng.run(max_ticks=50)
+    assert 0 in done
+    assert len(done[0].output) <= 12  # capped by cache length
+
+
+# ---------------------------------------------------------------------------
+# Sorted (dropless) MoE dispatch
+# ---------------------------------------------------------------------------
+
+def test_sorted_dispatch_matches_dense_without_drops():
+    cfg = reduced(get_model_config("granite-moe-1b-a400m"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y_dense, aux_d = moe_lib.moe_mlp(params, x, cfg, compute_dtype=jnp.float32)
+    y_sorted, aux_s = moe_lib.moe_mlp_sorted(params, x, cfg,
+                                             compute_dtype=jnp.float32)
+    np.testing.assert_allclose(y_dense, y_sorted, atol=1e-5)
+    np.testing.assert_allclose(aux_d, aux_s, atol=1e-6)
+
+
+def test_sorted_dispatch_differentiable():
+    cfg = reduced(get_model_config("granite-moe-1b-a400m"))
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), cfg, cfg.d_model)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    g = jax.grad(
+        lambda p: moe_lib.moe_mlp_sorted(p, x, cfg, jnp.float32)[0].sum())(params)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+    assert float(sum(jnp.abs(l).sum() for l in jax.tree.leaves(g))) > 0
+
+
+# ---------------------------------------------------------------------------
+# Evaluation metrics
+# ---------------------------------------------------------------------------
+
+def test_group_metrics_shapes():
+    cfg = reduced(get_model_config("qwen2-0.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dm = make_data_model(jax.random.PRNGKey(1), vocab_size=cfg.vocab_size,
+                         num_groups=4, num_clients=2, alpha=0.3)
+    b = sample_client_batch(dm, jax.random.PRNGKey(2), 0, 2, 16)
+    m = group_metrics(params, b, cfg, num_groups=4, compute_dtype=jnp.float32)
+    assert m["group_loss"].shape == (4,)
+    assert float(m["worst_group_loss"]) >= float(m["mean_loss"]) - 1e-5
+    assert 1 <= int(m["groups_present"]) <= 4
+
+
+# ---------------------------------------------------------------------------
+# bf16 corrections + time-varying topology
+# ---------------------------------------------------------------------------
+
+def _quad_setup(cfg, K=4, n=8):
+    key = jax.random.PRNGKey(0)
+    data = make_quadratic_data(key, n, dx=10, dy=5, heterogeneity=2.0)
+    prob = quadratic_problem(data, sigma=0.0)
+    cb = {k: v for k, v in data.items() if k != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (K, *v.shape)), cb)
+    st = init_state(prob, cfg, key, init_batch=cb,
+                    init_keys=jax.random.split(key, n))
+    return prob, st, jax.jit(make_round_step(prob, cfg)), kb
+
+
+def test_bf16_corrections_still_converge():
+    n, K = 8, 4
+    cfg = AlgorithmConfig(num_clients=n, local_steps=K, eta_cx=0.01,
+                          eta_cy=0.1, eta_sx=0.5, eta_sy=0.5, topology="ring",
+                          correction_dtype="bfloat16")
+    prob, st, step, kb = _quad_setup(cfg, K, n)
+    assert jax.tree.leaves(st.cx)[0].dtype == jnp.bfloat16
+    for t in range(300):
+        keys = jax.random.split(jax.random.PRNGKey(t), K * n).reshape(K, n, 2)
+        st = step(st, kb, keys)
+    assert float(diagnostics(prob, st)["phi_grad_norm"]) < 0.3
+
+
+def test_topology_cycle_converges_faster_than_worst_member():
+    """Alternating ring/exp gossip: convergence should land between the
+    static ring and static exp topologies (changing-topology regime)."""
+    n, K = 16, 4
+    results = {}
+    for label, topo, cycle in (("ring", "ring", ()),
+                               ("cycle", "ring", ("ring", "exp")),
+                               ("exp", "exp", ())):
+        cfg = AlgorithmConfig(num_clients=n, local_steps=K, eta_cx=0.01,
+                              eta_cy=0.1, eta_sx=0.6, eta_sy=0.6,
+                              topology=topo, topology_cycle=cycle)
+        prob, st, step, kb = _quad_setup(cfg, K, n)
+        for t in range(120):
+            keys = jax.random.split(jax.random.PRNGKey(t), K * n).reshape(K, n, 2)
+            st = step(st, kb, keys)
+        results[label] = float(diagnostics(prob, st)["phi_grad_norm"])
+    assert results["cycle"] <= results["ring"] + 1e-3
+    assert all(np.isfinite(v) for v in results.values())

@@ -1,0 +1,83 @@
+"""The loop-aware HLO cost parser vs known-cost programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_cost
+
+
+def _analyze(fn, *sds):
+    return hlo_cost.analyze(jax.jit(fn).lower(*sds).compile().as_text())
+
+
+def test_single_matmul_exact():
+    s = jax.ShapeDtypeStruct((128, 96), jnp.float32)
+    t = jax.ShapeDtypeStruct((96, 64), jnp.float32)
+    c = _analyze(lambda a, b: a @ b, s, t)
+    assert c.dot_flops == pytest.approx(2 * 128 * 96 * 64)
+
+
+def test_scan_multiplies_by_trip_count():
+    """A nonlinear scan body forces the forward to stay live: flops must scale
+    with the trip count, which XLA's own cost_analysis misses."""
+    n, d = 7, 64
+
+    def f(w, xs):
+        def body(c, x):
+            return jnp.tanh(c @ x), ()
+        c, _ = jax.lax.scan(body, w, xs)
+        return c
+
+    w = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    xs = jax.ShapeDtypeStruct((n, d, d), jnp.float32)
+    c = _analyze(f, w, xs)
+    assert c.dot_flops == pytest.approx(n * 2 * d**3, rel=0.01)
+
+
+def test_nested_scan_multiplicity():
+    n_out, n_in, d = 3, 4, 32
+
+    def f(w, xs):
+        def inner(c, x):
+            return jnp.tanh(c @ x), ()
+
+        def outer(c, xs_i):
+            c2, _ = jax.lax.scan(inner, c, xs_i)
+            return c2, ()
+
+        c, _ = jax.lax.scan(outer, w, xs)
+        return c
+
+    w = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    xs = jax.ShapeDtypeStruct((n_out, n_in, d, d), jnp.float32)
+    c = _analyze(f, w, xs)
+    assert c.dot_flops == pytest.approx(n_out * n_in * 2 * d**3, rel=0.01)
+
+
+def test_collectives_counted_with_shapes():
+    import os
+    # collective bytes over an 8-way mesh (device count fixed by conftest env
+    # only in dryrun; here use whatever single device -> psum lowers away).
+    # Instead check parse robustness on a synthetic HLO snippet:
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[16,128]) -> f32[16,128] {
+  %p = f32[16,128]{1,0} parameter(0)
+  ROOT %ag = f32[16,128]{1,0} all-gather(%p), dimensions={0}
+}
+"""
+    c = hlo_cost.analyze(txt)
+    assert c.collective_bytes["all-gather"] == 16 * 128 * 4
+
+
+def test_traffic_counts_fusion_boundary_only():
+    # one fused elementwise chain: traffic ~ inputs + outputs, not internals
+    def f(a):
+        return jnp.tanh(a * 2.0 + 1.0) * a
+
+    s = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = _analyze(f, s)
+    nbytes = 1024 * 1024 * 4
+    assert c.traffic_bytes <= 6 * nbytes  # a couple of reads + one write

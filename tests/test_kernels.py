@@ -1,0 +1,99 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles — shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, rglru_scan, ssd_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (2, 256, 4, 2, 64),
+    (1, 300, 4, 1, 64),     # non-multiple seq (padding path), MQA
+    (2, 128, 8, 8, 128),    # MHA, lane-width head dim
+    (1, 128, 2, 2, 32),
+])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, s, h, kv, d, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    out = flash_attention(q, k, v, window=window, backend="interpret")
+    ref = flash_attention(q, k, v, window=window, backend="xla")
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 100, 2, 64, 128, 64),  # padding path
+    (2, 64, 8, 16, 32, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_ref(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(KEY, 4)
+    xdt = (jax.random.normal(ks[0], (b, s, h, p)) * 0.5).astype(dtype)
+    loga = -jnp.abs(jax.random.normal(ks[1], (b, s, h))) * 0.3
+    bm = (jax.random.normal(ks[2], (b, s, n)) * 0.3).astype(dtype)
+    cm = (jax.random.normal(ks[3], (b, s, n)) * 0.3).astype(dtype)
+    out = ssd_scan(xdt, loga, bm, cm, chunk=chunk, backend="interpret")
+    ref = ssd_scan(xdt, loga, bm, cm, chunk=chunk, backend="xla")
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,s,w,chunk", [
+    (2, 256, 64, 64),
+    (1, 200, 128, 256),   # padding path
+    (3, 64, 32, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan_matches_ref(b, s, w, chunk, dtype):
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, w))).astype(dtype)
+    u = (jax.random.normal(ks[1], (b, s, w)) * 0.5).astype(dtype)
+    out = rglru_scan(a, u, chunk=chunk, backend="interpret")
+    ref = rglru_scan(a, u, chunk=chunk, backend="xla")
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_q_longer_than_kv_groups():
+    """GQA group indexing: 8 q heads sharing 2 kv heads gives the same result
+    as explicit repetition."""
+    b, s, h, kv, d = 1, 128, 8, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    out = flash_attention(q, k, v, backend="interpret")
+    k_rep = jnp.repeat(k, h // kv, axis=2)
+    v_rep = jnp.repeat(v, h // kv, axis=2)
+    ref = flash_attention(q, k_rep, v_rep, backend="xla")
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,d,v,bt,bv", [
+    (64, 32, 500, 32, 128),    # padded vocab path
+    (100, 64, 1024, 128, 512), # padded token path
+    (32, 16, 128, 32, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_cross_entropy_matches_ref(n, d, v, bt, bv, dtype):
+    from repro.kernels import fused_cross_entropy
+    ks = jax.random.split(KEY, 3)
+    hidden = jax.random.normal(ks[0], (n, d), dtype)
+    weight = jax.random.normal(ks[1], (v, d), dtype) * 0.1
+    labels = jax.random.randint(ks[2], (n,), 0, v)
+    out = fused_cross_entropy(hidden, weight, labels, block_t=bt, block_v=bv,
+                              backend="interpret")
+    ref = fused_cross_entropy(hidden, weight, labels, backend="xla")
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)

@@ -1,0 +1,74 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_model_config, reduced
+from repro.core import objectives
+
+
+def test_quadratic_phi_grad_matches_autodiff():
+    """∇Φ(x) = ∇_x f(x, y*(x)) by Danskin — verify the closed form against
+    autodiff through the inner argmax solution."""
+    key = jax.random.PRNGKey(0)
+    n = 6
+    data = objectives.make_quadratic_data(key, n, dx=8, dy=4, mu=2.0)
+    prob = objectives.quadratic_problem(data, sigma=0.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8,))
+
+    a_bar = data["A"].mean(0)
+    b_bar = data["B"].mean(0)
+    bv_bar = data["b"].mean(0)
+    q_bar = data["q"].mean(0)
+
+    def phi(x):
+        ystar = (b_bar @ x + bv_bar) / 2.0
+        return 0.5 * x @ (a_bar @ x) + q_bar @ x + ystar @ (b_bar @ x) \
+            + bv_bar @ ystar - 1.0 * ystar @ ystar
+    np.testing.assert_allclose(prob.phi_grad(x), jax.grad(phi)(x), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_quadratic_grads_unbiased():
+    """Assumption 3: stochastic grads average to the deterministic ones."""
+    key = jax.random.PRNGKey(0)
+    data = objectives.make_quadratic_data(key, 4, dx=6, dy=3)
+    prob = objectives.quadratic_problem(data, sigma=0.5)
+    x = jnp.ones((6,))
+    y = jnp.ones((3,))
+    batch = jax.tree.map(lambda v: v[0], {k: v for k, v in data.items() if k != "mu"})
+    gxs, gys = [], []
+    for i in range(500):
+        gx, gy = prob.grads(x, y, batch, jax.random.PRNGKey(i))
+        gxs.append(gx)
+        gys.append(gy)
+    prob0 = objectives.quadratic_problem(data, sigma=0.0)
+    gx0, gy0 = prob0.grads(x, y, batch, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(jnp.stack(gxs).mean(0), gx0, atol=0.1)
+    np.testing.assert_allclose(jnp.stack(gys).mean(0), gy0, atol=0.1)
+
+
+def test_dro_value_strongly_concave_in_y():
+    cfg = reduced(get_model_config("qwen2-0.5b"))
+    prob = objectives.dro_problem(cfg, num_groups=4, mu=2.0)
+    key = jax.random.PRNGKey(0)
+    x = prob.init_x(key)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks,
+             "groups": jnp.zeros((2, 16), jnp.int32)}
+    # f(x, .) has Hessian -mu*I exactly (linear + quadratic penalty)
+    h = jax.hessian(lambda y: prob.value(x, y, batch, None))(jnp.ones(4))
+    np.testing.assert_allclose(h, -2.0 * jnp.eye(4), atol=1e-3)
+
+
+def test_adversarial_value_finite_and_grad_flows():
+    cfg = reduced(get_model_config("qwen2-0.5b"))
+    prob = objectives.adversarial_problem(cfg, mu=10.0, scale=0.1)
+    key = jax.random.PRNGKey(0)
+    x = prob.init_x(key)
+    y = prob.init_y(key) + 0.1
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    gx, gy = prob.grads(x, y, batch, None)
+    assert bool(jnp.isfinite(gy).all())
+    assert float(jnp.abs(gy).sum()) > 0  # perturbation actually affects loss

@@ -1,0 +1,39 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adam, get_schedule, momentum, sgd
+
+
+@pytest.mark.parametrize("opt_fn", [sgd, momentum, adam])
+def test_optimizers_minimize_quadratic(opt_fn):
+    opt = opt_fn()
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, 0.05)
+    assert float(loss(params)) < 1e-3
+
+
+def test_wsd_schedule_shape():
+    fn = get_schedule("wsd", total_rounds=100, warmup=10)
+    vals = [float(fn(t)) for t in range(100)]
+    assert vals[0] < 0.2                      # warming up
+    assert abs(vals[50] - 1.0) < 1e-6         # stable plateau
+    assert vals[99] < 0.2                     # decayed
+    assert max(vals) <= 1.0 + 1e-6
+
+
+def test_cosine_schedule_monotone_decay():
+    fn = get_schedule("cosine", total_rounds=50, warmup=0)
+    vals = [float(fn(t)) for t in range(50)]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert vals[-1] >= 0.1 - 1e-6  # floor
+
+
+def test_constant_schedule():
+    fn = get_schedule("constant", total_rounds=10)
+    assert float(fn(5)) == 1.0

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import AlgorithmConfig
+from repro.core import (
+    init_state,
+    make_quadratic_data,
+    make_round_step,
+    mean_over_clients,
+    mixing_matrix,
+    quadratic_problem,
+    spectral_gap,
+)
+from repro.core.mixing import consensus_error, mix_dense
+from repro.kernels import rglru_scan
+
+
+@given(n=st.integers(2, 12), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_dense_mixing_is_linear_and_mean_preserving(n, seed):
+    w = mixing_matrix("ring", n)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, 7))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n, 7))
+    a = 0.37
+    lhs = mix_dense({"t": a * x + y}, w)["t"]
+    rhs = a * mix_dense({"t": x}, w)["t"] + mix_dense({"t": y}, w)["t"]
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(lhs.mean(0), (a * x + y).mean(0), rtol=1e-5,
+                               atol=1e-5)
+
+
+@given(n=st.integers(2, 8), k=st.integers(1, 5), het=st.floats(0.0, 3.0),
+       sigma=st.floats(0.0, 0.5))
+@settings(max_examples=15, deadline=None)
+def test_correction_sum_invariant(n, k, het, sigma):
+    """Lemma 8 as a property: Σ_i c_i = 0 after arbitrary rounds for any
+    (n, K, heterogeneity, noise)."""
+    key = jax.random.PRNGKey(n * 31 + k)
+    data = make_quadratic_data(key, n, dx=5, dy=3, heterogeneity=het)
+    prob = quadratic_problem(data, sigma=sigma)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, eta_sx=0.3, eta_sy=0.3, topology="ring")
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = make_round_step(prob, cfg)
+    for t in range(3):
+        keys = jax.random.split(jax.random.PRNGKey(t), k * n).reshape(k, n, 2)
+        stt = step(stt, kb, keys)
+    for c in (stt.cx, stt.cy):
+        mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
+        assert float(jnp.abs(mean_c).max()) < 1e-4
+
+
+@given(n=st.integers(2, 20))
+@settings(max_examples=20, deadline=None)
+def test_spectral_gap_in_unit_interval(n):
+    for topo in ("ring", "full", "exp"):
+        p = spectral_gap(mixing_matrix(topo, n))
+        assert 0.0 < p <= 1.0 + 1e-9
+
+
+@given(b=st.integers(1, 3), s=st.integers(2, 40), w=st.integers(1, 16),
+       seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_rglru_kernel_property(b, s, w, seed):
+    """Kernel == oracle for arbitrary small shapes (incl. ragged padding)."""
+    key = jax.random.PRNGKey(seed)
+    a = jax.nn.sigmoid(jax.random.normal(key, (b, s, w)))
+    u = jax.random.normal(jax.random.fold_in(key, 1), (b, s, w)) * 0.3
+    out = rglru_scan(a, u, chunk=16, backend="interpret")
+    ref = rglru_scan(a, u, chunk=16, backend="xla")
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_round_step_average_dynamics_fullmesh(seed):
+    """With W=J the averaged iterate is invariant to which client held what:
+    permuting client identities leaves x̄ unchanged."""
+    n, k = 4, 2
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=4, dy=2)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, topology="full")
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = make_round_step(prob, cfg)
+    keys = jax.random.split(jax.random.PRNGKey(1), k * n).reshape(k, n, 2)
+    out1 = mean_over_clients(step(stt, kb, keys).x)
+
+    perm = np.array([2, 3, 0, 1])
+    stt_p = jax.tree.map(lambda v: v[perm] if v.ndim > 0 else v, stt)
+    kb_p = jax.tree.map(lambda v: v[:, perm], kb)
+    keys_p = keys[:, perm]
+    out2 = mean_over_clients(step(stt_p, kb_p, keys_p).x)
+    np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-5)

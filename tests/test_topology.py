@@ -1,0 +1,51 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import topology
+
+
+@pytest.mark.parametrize("name", ["ring", "full", "exp", "star"])
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 8, 13])
+def test_mixing_matrix_valid(name, n):
+    w = topology.mixing_matrix(name, n)
+    assert w.shape == (n, n)
+    assert np.allclose(w, w.T)
+    assert np.allclose(w.sum(1), 1.0)
+    assert (w >= -1e-12).all()
+
+
+@pytest.mark.parametrize("n", [4, 9, 16])
+def test_torus_valid(n):
+    w = topology.mixing_matrix("torus", n)
+    assert np.allclose(w, w.T) and np.allclose(w.sum(1), 1.0)
+
+
+def test_torus_rejects_nonsquare():
+    with pytest.raises(ValueError):
+        topology.mixing_matrix("torus", 6)
+
+
+def test_spectral_gap_ordering():
+    """full > exp > torus > ring for largish n (connectivity ordering)."""
+    n = 16
+    gaps = {k: topology.spectral_gap(topology.mixing_matrix(k, n))
+            for k in ("ring", "torus", "exp", "full")}
+    assert gaps["full"] == pytest.approx(1.0)
+    assert gaps["full"] > gaps["exp"] > gaps["torus"] > gaps["ring"] > 0
+
+
+@given(n=st.integers(2, 24), name=st.sampled_from(["ring", "full", "exp", "star"]))
+@settings(max_examples=40, deadline=None)
+def test_contraction_property(n, name):
+    """Assumption 4: ||XW - X̄||_F^2 <= (1-p) ||X - X̄||_F^2 for random X."""
+    w = topology.mixing_matrix(name, n)
+    p = topology.spectral_gap(w)
+    assert 0 <= p <= 1 + 1e-9
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(7, n))
+    xbar = x.mean(1, keepdims=True)
+    lhs = np.linalg.norm(x @ w - xbar) ** 2
+    rhs = (1 - p) * np.linalg.norm(x - xbar) ** 2
+    assert lhs <= rhs + 1e-8 * max(1.0, rhs)
