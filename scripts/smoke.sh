@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI smoke entrypoint: fast, hermetic signal that the repo is healthy.
+#
+#   1. pytest collection-only — import health of every module (the historical
+#      failure mode: a broken import takes the whole suite down at collection).
+#   2. repro.launch.smoke — the dry-run compile path on 8 fake CPU devices:
+#      builds + jit-compiles the K-GT-Minimax train round on a
+#      (clients=2, fsdp=2, model=2) mesh and prefill/decode on a
+#      (data=4, model=2) mesh, exercising repro.dist shardings end-to-end.
+#
+# Usage: scripts/smoke.sh [--archs ARCH ...]     (default: qwen2-0.5b)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== pytest collection =="
+python -m pytest -q --collect-only > /dev/null
+echo "collection ok"
+
+echo "== step programs compile on fake CPU mesh =="
+python -m repro.launch.smoke "$@"
+
+echo "smoke ok"

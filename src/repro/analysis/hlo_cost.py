@@ -37,6 +37,10 @@ _DEF_RE = re.compile(
 _HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
 _CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
 _OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+# Operand references inside an op's argument list: "%name" tokens.  The
+# argument list cannot be comma-split naively — inline operand types like
+# f32[128,96]{1,0} contain commas.
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
 _CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
@@ -115,6 +119,15 @@ def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], str, Dict[str, 
     return comps, entry, shapes
 
 
+def _operand_names(arglist: str) -> List[str]:
+    """Operand value names from an op's argument list, in order."""
+    names = _OPERAND_NAME_RE.findall(arglist)
+    if names:
+        return names
+    # fallback for dumps that omit the % sigil (no inline types there)
+    return [t.strip().split(" ")[-1] for t in arglist.split(",") if t.strip()]
+
+
 def _dot_flops(op: OpInfo, shapes: Dict[str, str]) -> float:
     out_elems = 0
     for dt, dims in _shape_dims(op.type_str):
@@ -125,8 +138,7 @@ def _dot_flops(op: OpInfo, shapes: Dict[str, str]) -> float:
     m = _OPERANDS_RE.search(op.line.split("=", 1)[1])
     if not m:
         return 0.0
-    names = [t.strip().lstrip("%") for t in m.group(1).split(",")]
-    names = [n.split(" ")[-1].lstrip("%") for n in names if n]
+    names = _operand_names(m.group(1))
     lhs = names[0] if names else None
     cm = _CONTRACT_RE.search(op.line)
     contract = 1
@@ -234,8 +246,7 @@ def analyze(hlo_text: str) -> CostSummary:
                 b = _shape_bytes(op.type_str)
                 ops_m = _OPERANDS_RE.search(op.line.split("=", 1)[1])
                 if ops_m:
-                    for t in ops_m.group(1).split(","):
-                        nm = t.strip().split(" ")[-1].lstrip("%")
+                    for nm in _operand_names(ops_m.group(1)):
                         if nm in shapes:
                             b += _shape_bytes(shapes[nm])
                 out.traffic_bytes += m * b

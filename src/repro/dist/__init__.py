@@ -1,0 +1,60 @@
+"""Distribution subsystem: sharding specs + activation-constraint context.
+
+``repro.dist`` is the glue between the *algorithm* layer (``repro.core`` —
+pure pytree transforms with a leading clients dim) and the *hardware* layer
+(the meshes in ``repro.launch.mesh``).  It answers two questions:
+
+1. **Where does each parameter live?**  ``repro.dist.sharding`` maps
+   parameter pytrees to :class:`jax.sharding.NamedSharding`\\s: on the
+   decentralized training mesh the leading clients dim goes on the
+   ``clients`` axis (so per-client compute never crosses a client boundary
+   and only the K-GT-Minimax gossip communicates between clients), and each
+   client's shard is FSDP-2D sharded over its private ``(fsdp, model)``
+   sub-mesh.
+
+2. **Where do activations live?**  ``repro.dist.context`` is a thread-local
+   stack of *tagged* sharding-constraint functions that the model stack
+   (``repro.models``) consults via :func:`apply` / :func:`apply_residual`.
+   The model code stays mesh-agnostic; step builders in
+   ``repro.launch.steps`` install the layout (residual sharding per
+   ``MeshConfig.residual_mode``, optional attention head-sharding) with the
+   :func:`residual_constraint` context manager around tracing.
+
+``repro.dist.compat`` papers over jax API drift (``jax.set_mesh`` /
+``AxisType`` only exist on newer jax) so the same launch code runs on the
+CPU containers used for tests and on real TPU pods.
+"""
+from repro.dist.compat import abstract_mesh, make_mesh, mesh_of, use_mesh
+from repro.dist.context import (
+    apply,
+    apply_residual,
+    current_slots,
+    residual_constraint,
+)
+from repro.dist.sharding import (
+    CLIENTS,
+    FSDP,
+    MODEL,
+    leading_dims_constraint,
+    params_shardings,
+    residual_axes,
+    serve_params_shardings,
+)
+
+__all__ = [
+    "CLIENTS",
+    "FSDP",
+    "MODEL",
+    "abstract_mesh",
+    "apply",
+    "apply_residual",
+    "current_slots",
+    "leading_dims_constraint",
+    "make_mesh",
+    "mesh_of",
+    "params_shardings",
+    "residual_axes",
+    "residual_constraint",
+    "serve_params_shardings",
+    "use_mesh",
+]

@@ -1,0 +1,79 @@
+"""jax version compatibility shims for the mesh/sharding layer.
+
+The launch code targets the newest mesh API (``jax.set_mesh``, explicit
+``AxisType``) but must also run on the jax 0.4.x wheels baked into the CPU
+test containers, where neither exists.  All version probing lives here so
+``repro.launch`` and ``repro.dist.sharding`` can stay branch-free.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types (Auto lets GSPMD propagate freely)
+    from jax.sharding import AxisType
+
+    _AUTO = AxisType.Auto
+except ImportError:  # jax 0.4.x: every axis is implicitly auto
+    AxisType = None
+    _AUTO = None
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with all axes ``Auto``, on any supported jax.
+
+    Used for the production mesh (``repro.launch.mesh``) and for the
+    CPU-backed fake meshes in tests/smoke runs (``XLA_FLAGS=
+    --xla_force_host_platform_device_count=N`` before first jax init).
+    """
+    if _AUTO is not None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(_AUTO,) * len(tuple(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def mesh_of(devices: np.ndarray, axis_names: Sequence[str]) -> Mesh:
+    """Wrap an explicit device array in a Mesh with ``Auto`` axes.
+
+    This is the decentralized-mesh constructor: the caller reshapes the
+    production device array to ``(clients, fsdp, model)`` so one K-GT-Minimax
+    client owns each contiguous ``fsdp x model`` block (see
+    ``repro.launch.mesh.make_decentralized_mesh``).
+    """
+    names = tuple(axis_names)
+    if _AUTO is not None:
+        return Mesh(devices, names, axis_types=(_AUTO,) * len(names))
+    return Mesh(devices, names)
+
+
+def use_mesh(mesh: Mesh):
+    """Context manager entering ``mesh`` (``jax.set_mesh`` when available).
+
+    Inside the context, jit tracing and sharding-constraint resolution treat
+    ``mesh`` as the ambient mesh.  On jax 0.4.x a ``Mesh`` is itself a
+    context manager with the same meaning, so we return it directly.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def abstract_mesh(axis_sizes: Mapping[str, int]):
+    """Device-free :class:`jax.sharding.AbstractMesh` for spec-level work.
+
+    Lets tests and planners build ``NamedSharding``\\s for meshes larger than
+    the local device count (e.g. asserting the clients-axis placement of
+    :func:`repro.dist.sharding.params_shardings` on a 1-CPU container).
+    Handles the two AbstractMesh constructor generations.
+    """
+    from jax.sharding import AbstractMesh
+
+    items = tuple(axis_sizes.items())
+    try:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(items)
+    except TypeError:  # jax >= 0.5: AbstractMesh(sizes, names)
+        return AbstractMesh(tuple(s for _, s in items),
+                            tuple(n for n, _ in items))

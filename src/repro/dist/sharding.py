@@ -1,0 +1,192 @@
+"""Parameter sharding specs for the decentralized and production meshes.
+
+Axis vocabulary (see ``repro.launch.mesh``):
+
+* Decentralized training mesh ``(clients, fsdp, model)`` — one K-GT-Minimax
+  client per contiguous ``fsdp x model`` block.  Every algorithm-state leaf
+  carries a leading clients dim ``n`` (``repro.core.kgt_minimax``); mapping
+  that dim onto the ``clients`` axis is what confines each client's K local
+  DRO-minimax steps to its own sub-mesh — the only cross-client collectives
+  left in the compiled HLO are the two gossips per round (lines 7–8 and
+  10–11 of Algorithm 1), which is the paper's communication-efficiency claim
+  realized as a sharding invariant.
+* Production serving mesh ``(data, model)`` or ``(pod, data, model)`` —
+  plain tensor-parallel inference: weights sharded over ``model``,
+  replicated over the batch axes.
+
+Within a client, ``param_mode`` picks the layout: ``"fsdp2d"`` shards each
+weight over ``(fsdp, model)`` (the default: tracking state cx/cy is fp32 and
+client-stacked, so per-device memory is the binding constraint — see the
+internvl2 note in ``repro.launch.mesh``); ``"replicated"`` keeps weights
+client-replicated (fastest for small models where gather latency dominates).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Canonical axis names of the decentralized logical mesh.
+CLIENTS = "clients"
+FSDP = "fsdp"
+MODEL = "model"
+
+# MoE expert-weight leaves: (..., experts, d_in, d_out); the experts dim sits
+# at ndim-3 whether or not the tree carries clients/repeat leading dims.
+_EXPERT_LEAF_KEYS = frozenset({"gate", "up", "down"})
+
+
+def _axis_sizes(mesh) -> dict:
+    """{axis_name: size} for a concrete Mesh or an AbstractMesh."""
+    return dict(mesh.shape)
+
+
+def _best_dim(shape: Tuple[int, ...], used, axis_size: int) -> Optional[int]:
+    """Largest dim divisible by ``axis_size`` (ties -> later dim, i.e. the
+    matmul output end of a weight), or None if nothing shardable."""
+    cands = [(sz, i) for i, sz in enumerate(shape)
+             if i not in used and sz > 1 and sz >= axis_size
+             and sz % axis_size == 0]
+    return max(cands)[1] if cands else None
+
+
+def _is_expert_leaf(path) -> bool:
+    """True for MoE expert weights (stacked ``(…, e, d, f)`` leaves under a
+    ``"moe"`` dict key) — the leaves ``moe_expert_parallel`` maps onto the
+    ``model`` axis so dispatch lowers to all-to-alls."""
+    keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    return "moe" in keys and keys[-1] in _EXPERT_LEAF_KEYS
+
+
+def params_shardings(
+    params,
+    mesh,
+    *,
+    leading_clients: bool = True,
+    param_mode: str = "fsdp2d",
+    expert_parallel: bool = False,
+):
+    """Map a parameter pytree to ``NamedSharding``\\s on the decentralized mesh.
+
+    Args:
+      params: pytree of arrays or ``ShapeDtypeStruct``\\s.  With
+        ``leading_clients=True`` every leaf is the client-stacked algorithm
+        state of ``repro.core.kgt_minimax.KGTState`` (``(n, …)``); dim 0 is
+        pinned to the ``clients`` mesh axis so gossip is the only
+        cross-client traffic.
+      mesh: the ``(clients, fsdp, model)`` mesh (or an AbstractMesh with the
+        same axis names, for device-free spec computation).
+      leading_clients: whether leaf dim 0 is the clients dim.
+      param_mode: ``"fsdp2d"`` — within each client, shard the largest
+        remaining dim over ``model`` and the next over ``fsdp`` (ZeRO-3-like
+        2D layout; GSPMD inserts the per-layer gathers).  ``"replicated"`` —
+        leave weights whole within a client.
+      expert_parallel: additionally pin the experts dim of MoE expert
+        weights to ``model`` (expert parallelism; the measured win for the
+        MoE archs, see the ``expert_parallel`` dry-run variant).
+
+    Returns a pytree of ``NamedSharding`` congruent with ``params``.  A dim
+    is only sharded when its size divides the axis extent, so the same specs
+    work on tiny CPU fake meshes (axis sizes 1–2) and full pods.
+    """
+    sizes = _axis_sizes(mesh)
+
+    def spec_for(path, leaf):
+        shape = tuple(leaf.shape)
+        parts = [None] * len(shape)
+        used = set()
+        if leading_clients and shape:
+            parts[0] = CLIENTS
+            used.add(0)
+        if param_mode != "replicated":
+            if expert_parallel and _is_expert_leaf(path) and len(shape) >= 3:
+                e_dim = len(shape) - 3
+                if (e_dim not in used and shape[e_dim] % sizes[MODEL] == 0
+                        and shape[e_dim] >= sizes[MODEL]):
+                    parts[e_dim] = MODEL
+                    used.add(e_dim)
+            for axis in (MODEL, FSDP):
+                if axis in parts:
+                    continue
+                d = _best_dim(shape, used, sizes[axis])
+                if d is not None:
+                    parts[d] = axis
+                    used.add(d)
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def serve_params_shardings(params, mesh, *, expert_parallel: bool = False):
+    """Tensor-parallel inference shardings on the production mesh.
+
+    Weights shard their largest divisible dim over ``model`` and replicate
+    over the batch axes (``data`` / ``pod``): activations on the serving
+    path are batch-over-``data`` and seq-over-``model`` (sequence
+    parallelism — see ``repro.launch.steps.build_prefill_step``), so
+    model-axis TP keeps every matmul's weight shard resident with its
+    activation shard and no weight ever crosses the pod boundary.
+    """
+    sizes = _axis_sizes(mesh)
+    n_model = sizes.get("model", 1)
+
+    def spec_for(path, leaf):
+        shape = tuple(leaf.shape)
+        parts = [None] * len(shape)
+        used = set()
+        if expert_parallel and _is_expert_leaf(path) and len(shape) >= 3:
+            e_dim = len(shape) - 3
+            if shape[e_dim] % n_model == 0 and shape[e_dim] >= n_model:
+                parts[e_dim] = "model"
+                used.add(e_dim)
+        if "model" not in parts:
+            d = _best_dim(shape, used, n_model)
+            if d is not None:
+                parts[d] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ---------------------------------------------------------------------------
+# Activation (residual-stream) constraints
+# ---------------------------------------------------------------------------
+
+def residual_axes(residual_mode: str) -> Tuple[str, ...]:
+    """Mesh axes for the leading dims of the residual stream, per
+    ``MeshConfig.residual_mode``.
+
+    ``"batch_seq"`` (default): batch over ``fsdp``, sequence over ``model``
+    — full 2D activation sharding; GSPMD gathers the sequence dim around
+    attention.  ``"batch"``: batch over ``fsdp`` only, sequence replicated —
+    trades activation memory for the seq gathers (the ``batch_residual``
+    dry-run variant).
+    """
+    if residual_mode == "batch":
+        return (FSDP,)
+    if residual_mode == "batch_seq":
+        return (FSDP, MODEL)
+    raise ValueError(f"unknown residual_mode: {residual_mode!r}")
+
+
+def leading_dims_constraint(mesh, axes: Sequence[Optional[str]]):
+    """Constraint fn sharding the first ``len(axes)`` dims of ``x`` by ``axes``.
+
+    This is what step builders install as the ``residual`` slot of
+    ``repro.dist.context``: the model stack calls
+    :func:`repro.dist.context.apply_residual` once per scanned unit
+    (``repro.models.transformer.stack_forward``), re-pinning the residual
+    stream so GSPMD's propagation can't drift layouts across scan
+    iterations.  Arrays with fewer dims than ``axes`` pass through.
+    """
+    axes = tuple(axes)
+
+    def fn(x):
+        if x.ndim < len(axes):
+            return x
+        spec = P(*axes, *([None] * (x.ndim - len(axes))))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return fn

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.analysis import hlo_cost
 from repro.configs import registry
 from repro.configs.shapes import SHAPES
+from repro.dist import compat
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
 
@@ -101,7 +102,7 @@ def run_pair(arch_id: str, shape_name: str, mesh_kind: str,
         algo = _Algo(num_clients=mcfg.num_clients, **over.get("algo", {}))
         mesh = mesh_lib.make_decentralized_mesh(mcfg)
         rec["mesh_shape"] = dict(zip(mesh.axis_names, mesh.devices.shape))
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             jitted, state_sds, batch_sds, key_sds, _ = steps_lib.build_train_round(
                 cfg, shape, mesh, mcfg, algo=algo)
             lowered = jitted.lower(state_sds, batch_sds, key_sds)
@@ -114,7 +115,7 @@ def run_pair(arch_id: str, shape_name: str, mesh_kind: str,
             mcfg_model = steps_lib.long_context_variant(cfg)
             rec["variant"] = (
                 "native-subquadratic" if mcfg_model is cfg else "sliding-window-4096")
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             if shape.kind == "prefill":
                 jitted, p_sds, b_sds, c_sds = steps_lib.build_prefill_step(
                     mcfg_model, shape, mesh)
@@ -140,6 +141,8 @@ def run_pair(arch_id: str, shape_name: str, mesh_kind: str,
         + rec["memory"]["temp_bytes"] - rec["memory"]["alias_bytes"])
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     rec["cost_xla"] = {  # XLA's own numbers (counts while bodies once)
         "flops": float(cost.get("flops", 0.0)),
         "bytes_accessed": float(cost.get("bytes accessed", 0.0)),

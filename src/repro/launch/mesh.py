@@ -14,23 +14,24 @@ from typing import Optional
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
 from repro.configs.base import MeshConfig
+from repro.dist import compat
+from repro.dist.sharding import CLIENTS, FSDP, MODEL
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_decentralized_mesh(mcfg: MeshConfig) -> Mesh:
     """Reshape the production device array to (clients, fsdp, model)."""
     prod = make_production_mesh(multi_pod=mcfg.multi_pod)
     devices = prod.devices.reshape(mcfg.num_clients, mcfg.fsdp, mcfg.model)
-    return Mesh(devices, ("clients", "fsdp", "model"),
-                axis_types=(AxisType.Auto,) * 3)
+    return compat.mesh_of(devices, (CLIENTS, FSDP, MODEL))
 
 
 # Per-arch overrides of the decentralized layout: the 70B-class model needs a
@@ -52,5 +53,19 @@ def decentralized_mesh_config(arch_id: str, *, multi_pod: bool = False) -> MeshC
 def local_mesh(n_devices: Optional[int] = None) -> Mesh:
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     devs = np.array(jax.devices()[: n_devices or len(jax.devices())])
-    return Mesh(devs.reshape(len(devs), 1, 1), ("clients", "fsdp", "model"),
-                axis_types=(AxisType.Auto,) * 3)
+    return compat.mesh_of(devs.reshape(len(devs), 1, 1), (CLIENTS, FSDP, MODEL))
+
+
+def fake_mesh(num_clients: int = 2, fsdp: int = 2, model: int = 2) -> Mesh:
+    """CPU-backed fake decentralized mesh for compile-level tests.
+
+    Requires ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (with
+    N >= num_clients*fsdp*model) to be set before jax's first backend init —
+    see ``repro.launch.smoke`` / ``scripts/smoke.sh``.
+    """
+    need = num_clients * fsdp * model
+    if len(jax.devices()) < need:
+        raise RuntimeError(
+            f"fake_mesh needs {need} devices, have {len(jax.devices())}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before jax init")
+    return compat.make_mesh((num_clients, fsdp, model), (CLIENTS, FSDP, MODEL))

@@ -56,13 +56,14 @@ def serve_local(arch: str, batch: int, prompt_len: int, gen_tokens: int,
 def serve_production(arch: str, shape_name: str, multi_pod: bool) -> None:
     """AOT-compile the serving steps against the production mesh and report
     the binding points (a real deployment feeds live params/caches here)."""
+    from repro.dist import compat
     from repro.launch import mesh as mesh_lib
     from repro.launch import steps as steps_lib
 
     cfg = registry.get_model_config(arch)
     shape = SHAPES[shape_name]
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         if shape.kind == "prefill":
             jitted, p_sds, b_sds, c_sds = steps_lib.build_prefill_step(
                 cfg, shape, mesh)

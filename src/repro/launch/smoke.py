@@ -1,0 +1,94 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# NOTE: must run before any other import — jax locks the device count at
+# first backend init.  8 fake host devices back a (2,2,2) decentralized mesh
+# and a (4,2) serving mesh.
+
+"""Compile-level smoke of the whole launch stack on CPU fake devices.
+
+For a reduced architecture, builds and jit-compiles all three step programs
+against their meshes:
+
+  train  -> one K-GT-Minimax round on a (clients=2, fsdp=2, model=2) mesh
+  prefill/decode -> the serving steps on a (data=4, model=2) mesh
+
+This is the fastest end-to-end check that ``repro.dist`` shardings, the
+residual-constraint context, and the model stack agree — and the second leg
+of ``scripts/smoke.sh`` (the future CI entrypoint).  Exit code 0 iff every
+build compiles.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.smoke [--archs qwen2-0.5b ...]
+"""
+import argparse
+import sys
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import AlgorithmConfig, InputShape, MeshConfig
+from repro.dist import compat
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+
+TRAIN_SHAPE = InputShape(name="smoke_train", seq_len=64, global_batch=4,
+                         kind="train")
+SERVE_SHAPE = InputShape(name="smoke_serve", seq_len=64, global_batch=8,
+                         kind="prefill")
+
+
+def smoke_arch(arch: str) -> bool:
+    cfg = registry.reduced(registry.get_model_config(arch))
+    ok = True
+
+    t0 = time.time()
+    mesh = mesh_lib.fake_mesh(2, 2, 2)
+    mcfg = MeshConfig(num_clients=2, fsdp=2, model=2,
+                      moe_expert_parallel=bool(cfg.moe.num_experts))
+    algo = AlgorithmConfig(num_clients=2, local_steps=2)
+    try:
+        with compat.use_mesh(mesh):
+            jitted, state_sds, batch_sds, key_sds, _ = steps_lib.build_train_round(
+                cfg, TRAIN_SHAPE, mesh, mcfg, algo=algo)
+            jitted.lower(state_sds, batch_sds, key_sds).compile()
+        print(f"[smoke] {arch}: train round compiled "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    except Exception as e:
+        ok = False
+        print(f"[smoke] {arch}: train FAILED: {type(e).__name__}: {e}",
+              flush=True)
+
+    t0 = time.time()
+    smesh = compat.make_mesh((4, 2), ("data", "model"))
+    try:
+        with compat.use_mesh(smesh):
+            jp, p_sds, b_sds, c_sds = steps_lib.build_prefill_step(
+                cfg, SERVE_SHAPE, smesh)
+            jp.lower(p_sds, b_sds, c_sds).compile()
+            jd, p_sds, c_sds, t_sds, pos_sds = steps_lib.build_decode_step(
+                cfg, SERVE_SHAPE, smesh)
+            jd.lower(p_sds, c_sds, t_sds, pos_sds).compile()
+        print(f"[smoke] {arch}: prefill+decode compiled "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    except Exception as e:
+        ok = False
+        print(f"[smoke] {arch}: serve FAILED: {type(e).__name__}: {e}",
+              flush=True)
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=["qwen2-0.5b"],
+                    choices=sorted(registry.ARCHS))
+    args = ap.parse_args()
+    print(f"[smoke] {len(jax.devices())} fake devices "
+          f"({jax.devices()[0].platform})", flush=True)
+    results = [smoke_arch(a) for a in args.archs]
+    sys.exit(0 if all(results) else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,16 +31,6 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
 
 
-def _leading_dims_spec(mesh: Mesh, axes: Tuple) -> Any:
-    """Constraint fn: shard the first len(axes) dims of x by ``axes``."""
-    def fn(x):
-        if x.ndim < len(axes):
-            return x
-        spec = P(*axes, *([None] * (x.ndim - len(axes))))
-        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
-    return fn
-
-
 # ---------------------------------------------------------------------------
 # Training round
 # ---------------------------------------------------------------------------
@@ -52,6 +42,7 @@ def build_train_round(
     mcfg: MeshConfig,
     algo: Optional[AlgorithmConfig] = None,
     minimax: Optional[MinimaxConfig] = None,
+    lr_scale=None,
 ):
     """Returns (jitted_round_step, state_sds, batch_sds, key_sds, shardings).
 
@@ -70,7 +61,7 @@ def build_train_round(
         model_cfg, num_groups=minimax.num_groups, mu=minimax.mu,
         compute_dtype=jnp.bfloat16, remat=mcfg.remat)
     w = topology.mixing_matrix(algo.topology, n)
-    round_fn = kgt.make_round_step(problem, algo, w)
+    round_fn = kgt.make_round_step(problem, algo, w, lr_scale=lr_scale)
 
     # ---- abstract state -------------------------------------------------
     x_one = jax.eval_shape(lambda k: model_lib.init_params(model_cfg, k),
@@ -115,9 +106,8 @@ def build_train_round(
             mesh, P(None, sh.CLIENTS, sh.FSDP, None, None))
     key_shard = NamedSharding(mesh, P(None, sh.CLIENTS, None))
 
-    res_axes = ((sh.FSDP,) if mcfg.residual_mode == "batch"
-                else (sh.FSDP, sh.MODEL))
-    constraint = _leading_dims_spec(mesh, res_axes)
+    res_axes = sh.residual_axes(mcfg.residual_mode)
+    constraint = sh.leading_dims_constraint(mesh, res_axes)
     slots = {}
     if mcfg.attn_heads_sharding:
         # q (B,S,H,D): heads over model (GSPMD: all-to-all from seq-sharded),
@@ -192,7 +182,7 @@ def build_prefill_step(model_cfg: ModelConfig, shape: InputShape, mesh: Mesh):
     # serving residual: batch over data, seq over model (sequence parallelism;
     # GSPMD gathers seq around attention and re-scatters — measured strictly
     # better than batch-only TP layout here, see EXPERIMENTS.md §Perf).
-    constraint = _leading_dims_spec(mesh, (batch_axis, "model"))
+    constraint = sh.leading_dims_constraint(mesh, (batch_axis, "model"))
 
     def prefill(params, batch, caches):
         with dist_ctx.residual_constraint(constraint):
@@ -244,7 +234,7 @@ def build_decode_step(model_cfg: ModelConfig, shape: InputShape, mesh: Mesh):
     pos_sds = _sds((), jnp.int32)
 
     batch_axis = _serve_batch_axes(mesh)[0]
-    constraint = _leading_dims_spec(mesh, (batch_axis,))
+    constraint = sh.leading_dims_constraint(mesh, (batch_axis,))
 
     def decode(params, caches, tokens, pos):
         with dist_ctx.residual_constraint(constraint):

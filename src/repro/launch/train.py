@@ -69,7 +69,33 @@ def train(args) -> dict:
                            init_keys=jax.random.split(ki, algo.num_clients))
 
     sched = schedules.get_schedule(args.schedule, args.rounds, args.warmup)
-    step = jax.jit(kgt.make_round_step(problem, algo, lr_scale=sched))
+    if getattr(args, "mesh", "host") == "decentralized":
+        # Sharded path: the same jit program the dry-run lowers for a pod,
+        # here over whatever local devices exist (clients axis = n_devices).
+        # repro.dist places the leading clients dim of the K-GT-Minimax
+        # state on the "clients" mesh axis; only gossip crosses clients.
+        from repro.configs.base import InputShape, MeshConfig
+        from repro.dist import compat
+        from repro.launch import mesh as mesh_lib
+        from repro.launch import steps as steps_lib
+
+        # clients axis must divide the state's leading dim (= num_clients):
+        # use the largest device count that does.
+        import math
+        n_dev = math.gcd(len(jax.devices()), algo.num_clients)
+        mesh = mesh_lib.local_mesh(n_dev)
+        mcfg = MeshConfig(num_clients=algo.num_clients, fsdp=1, model=1,
+                          param_mode="replicated", remat=False)
+        shape = InputShape(name="train_cli", seq_len=args.seq_len,
+                           global_batch=args.batch * algo.num_clients,
+                           kind="train")
+        with compat.use_mesh(mesh):
+            step, _, _, _, (state_shard, _, _) = steps_lib.build_train_round(
+                cfg, shape, mesh, mcfg, algo=algo, minimax=minimax,
+                lr_scale=sched)
+        state = jax.device_put(state, state_shard)
+    else:
+        step = jax.jit(kgt.make_round_step(problem, algo, lr_scale=sched))
     w = topology.mixing_matrix(algo.topology, algo.num_clients)
     print(f"[train] {cfg.name}: {sum(x.size for x in jax.tree.leaves(state.x))/1e6:.2f}M "
           f"client-stacked params, n={algo.num_clients}, K={algo.local_steps}, "
@@ -134,6 +160,10 @@ def main() -> None:
     ap.add_argument("--eta-cx", type=float, default=0.05)
     ap.add_argument("--eta-cy", type=float, default=0.5)
     ap.add_argument("--eta-s", type=float, default=0.7)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "decentralized"],
+                    help="host: plain single-device jit; decentralized: the "
+                         "repro.dist-sharded round over the local device mesh")
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--mixing-impl", default="dense")
     ap.add_argument("--gossip-dtype", default="float32")

@@ -1,0 +1,219 @@
+"""Tests for the ``repro.dist`` sharding/context subsystem.
+
+Spec-level tests use a device-free AbstractMesh (so they run on the 1-CPU
+container); the compile-level check (every step program jit-compiles on a
+CPU fake mesh) runs ``repro.launch.smoke`` in a subprocess because the
+XLA host-device-count flag must be set before jax's first backend init.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs.registry import get_model_config, reduced
+from repro.dist import compat
+from repro.dist import context as dist_ctx
+from repro.dist import sharding as sh
+from repro.models import model as model_lib
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _dec_mesh(clients=4, fsdp=2, model=2):
+    return compat.abstract_mesh(
+        {sh.CLIENTS: clients, sh.FSDP: fsdp, sh.MODEL: model})
+
+
+def _stacked_params_sds(arch, n=4):
+    """Client-stacked abstract params, like build_train_round's x_sds."""
+    cfg = reduced(get_model_config(arch))
+    one = jax.eval_shape(lambda k: model_lib.init_params(cfg, k),
+                         jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), one)
+
+
+def _assert_divisible(sds_tree, shard_tree, mesh):
+    sizes = dict(mesh.shape)
+    for sds, ns in zip(jax.tree.leaves(sds_tree), jax.tree.leaves(shard_tree)):
+        for dim, entry in enumerate(ns.spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            extent = int(np.prod([sizes[a] for a in axes]))
+            assert sds.shape[dim] % extent == 0, (sds.shape, ns.spec, dim)
+
+
+# ---------------------------------------------------------------------------
+# params_shardings (decentralized training mesh)
+# ---------------------------------------------------------------------------
+
+def test_params_shardings_leading_clients_dim():
+    """The core invariant: dim 0 of every state leaf sits on the clients
+    axis — per-client compute stays inside a client; only gossip mixes."""
+    mesh = _dec_mesh()
+    sds = _stacked_params_sds("qwen2-0.5b")
+    shards = sh.params_shardings(sds, mesh)
+    for ns in jax.tree.leaves(shards):
+        spec = ns.spec
+        assert spec[0] == sh.CLIENTS
+        assert sh.CLIENTS not in spec[1:]
+    _assert_divisible(sds, shards, mesh)
+
+
+def test_params_shardings_fsdp2d_shards_within_client():
+    mesh = _dec_mesh()
+    sds = _stacked_params_sds("qwen2-0.5b")
+    shards = sh.params_shardings(sds, mesh, param_mode="fsdp2d")
+    embed = shards["embed"].spec
+    assert sh.MODEL in embed[1:] and sh.FSDP in embed[1:]
+
+
+def test_params_shardings_replicated_mode():
+    mesh = _dec_mesh()
+    sds = _stacked_params_sds("qwen2-0.5b")
+    shards = sh.params_shardings(sds, mesh, param_mode="replicated")
+    for ns in jax.tree.leaves(shards):
+        assert ns.spec[0] == sh.CLIENTS
+        assert all(p is None for p in ns.spec[1:])
+
+
+def test_params_shardings_expert_parallel_pins_expert_dim():
+    mesh = _dec_mesh()
+    sds = _stacked_params_sds("granite-moe-1b-a400m")
+    shards = sh.params_shardings(sds, mesh, expert_parallel=True)
+    seen = 0
+    for path, ns in jax.tree_util.tree_leaves_with_path(shards):
+        keys = [getattr(p, "key", None) for p in path]
+        if "moe" in keys and keys[-1] in ("gate", "up", "down"):
+            assert ns.spec[len(ns.spec) - 3] == sh.MODEL, (keys, ns.spec)
+            seen += 1
+    assert seen >= 3  # gate/up/down present
+
+
+def test_params_shardings_never_shards_indivisible_dims():
+    mesh = _dec_mesh(clients=4, fsdp=2, model=2)
+    tree = {"w": jax.ShapeDtypeStruct((4, 7, 5), jnp.float32)}
+    shards = sh.params_shardings(tree, mesh)
+    assert shards["w"].spec[0] == sh.CLIENTS
+    assert all(p is None for p in shards["w"].spec[1:])
+
+
+# ---------------------------------------------------------------------------
+# serve_params_shardings (production mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("axes", [{"data": 4, "model": 2},
+                                  {"pod": 2, "data": 2, "model": 2}])
+def test_serve_params_shardings_tp_over_model_only(axes):
+    mesh = compat.abstract_mesh(axes)
+    cfg = reduced(get_model_config("qwen2-0.5b"))
+    sds = jax.eval_shape(lambda k: model_lib.init_params(cfg, k),
+                         jax.random.PRNGKey(0))
+    shards = sh.serve_params_shardings(sds, mesh)
+    _assert_divisible(sds, shards, mesh)
+    model_hits = 0
+    for ns in jax.tree.leaves(shards):
+        for entry in ns.spec:
+            assert entry in (None, "model"), ns.spec  # replicated over batch axes
+            model_hits += entry == "model"
+    assert model_hits > 0
+    assert "model" in shards["embed"].spec
+
+
+def test_serve_params_shardings_expert_parallel():
+    mesh = compat.abstract_mesh({"data": 4, "model": 2})
+    cfg = reduced(get_model_config("granite-moe-1b-a400m"))
+    sds = jax.eval_shape(lambda k: model_lib.init_params(cfg, k),
+                         jax.random.PRNGKey(0))
+    shards = sh.serve_params_shardings(sds, mesh, expert_parallel=True)
+    for path, ns in jax.tree_util.tree_leaves_with_path(shards):
+        keys = [getattr(p, "key", None) for p in path]
+        if "moe" in keys and keys[-1] in ("gate", "up", "down"):
+            assert ns.spec[len(ns.spec) - 3] == "model"
+
+
+# ---------------------------------------------------------------------------
+# context
+# ---------------------------------------------------------------------------
+
+def test_apply_is_identity_without_context():
+    x = jnp.ones((2, 3))
+    assert dist_ctx.apply("attn_qkv", x) is x
+    assert dist_ctx.apply_residual(x) is x
+    assert dist_ctx.current_slots() == {}
+
+
+def test_residual_constraint_installs_and_restores():
+    calls = []
+
+    def fn(x):
+        calls.append(x.shape)
+        return x
+
+    x = jnp.ones((2, 3))
+    with dist_ctx.residual_constraint(fn):
+        assert dist_ctx.apply_residual(x) is x
+    assert calls == [(2, 3)]
+    dist_ctx.apply_residual(x)
+    assert calls == [(2, 3)]  # popped on exit
+
+
+def test_tagged_slots_and_nesting_shadowing():
+    order = []
+    outer = {"attn_qkv": lambda x: order.append("outer_qkv") or x,
+             "attn_out": lambda x: order.append("outer_out") or x}
+    inner_qkv = lambda x: order.append("inner_qkv") or x
+    x = jnp.zeros(())
+    with dist_ctx.residual_constraint(**outer):
+        with dist_ctx.residual_constraint(attn_qkv=inner_qkv):
+            dist_ctx.apply("attn_qkv", x)   # inner shadows outer
+            dist_ctx.apply("attn_out", x)   # falls through to outer
+        dist_ctx.apply("attn_qkv", x)       # back to outer
+    assert order == ["inner_qkv", "outer_out", "outer_qkv"]
+
+
+def test_residual_axes_modes():
+    assert sh.residual_axes("batch") == (sh.FSDP,)
+    assert sh.residual_axes("batch_seq") == (sh.FSDP, sh.MODEL)
+    with pytest.raises(ValueError):
+        sh.residual_axes("bogus")
+
+
+@pytest.mark.parametrize("mode", ["batch", "batch_seq"])
+def test_residual_constraint_roundtrips_apply_residual(mode):
+    """Under jit, the installed residual constraint must be value-preserving
+    in both MeshConfig.residual_mode settings (it only pins layout)."""
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                (sh.CLIENTS, sh.FSDP, sh.MODEL))
+    fn = sh.leading_dims_constraint(mesh, sh.residual_axes(mode))
+    x = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4)
+    jitted = jax.jit(lambda v: dist_ctx.apply_residual(v) * 1.0)
+    with dist_ctx.residual_constraint(fn):
+        out = jitted(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    # 1-D arrays (fewer dims than the axes tuple) pass through untouched
+    v = jnp.arange(3.0)
+    with dist_ctx.residual_constraint(fn):
+        np.testing.assert_array_equal(np.asarray(fn(v)), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# compile-level smoke (subprocess: XLA flag must precede jax init)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_steps_compile_on_cpu_fake_mesh():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.smoke"],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    assert "train round compiled" in proc.stdout
+    assert "prefill+decode compiled" in proc.stdout

@@ -1,7 +1,14 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# Only test_contraction_property needs hypothesis; the validity tests below
+# must keep running when it is absent, so the skip is per-test, not
+# module-level importorskip (which would drop the whole module).
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    given = settings = st = None
 
 from repro.core import topology
 
@@ -36,16 +43,22 @@ def test_spectral_gap_ordering():
     assert gaps["full"] > gaps["exp"] > gaps["torus"] > gaps["ring"] > 0
 
 
-@given(n=st.integers(2, 24), name=st.sampled_from(["ring", "full", "exp", "star"]))
-@settings(max_examples=40, deadline=None)
-def test_contraction_property(n, name):
-    """Assumption 4: ||XW - X̄||_F^2 <= (1-p) ||X - X̄||_F^2 for random X."""
-    w = topology.mixing_matrix(name, n)
-    p = topology.spectral_gap(w)
-    assert 0 <= p <= 1 + 1e-9
-    rng = np.random.default_rng(n)
-    x = rng.normal(size=(7, n))
-    xbar = x.mean(1, keepdims=True)
-    lhs = np.linalg.norm(x @ w - xbar) ** 2
-    rhs = (1 - p) * np.linalg.norm(x - xbar) ** 2
-    assert lhs <= rhs + 1e-8 * max(1.0, rhs)
+if st is not None:
+    @given(n=st.integers(2, 24),
+           name=st.sampled_from(["ring", "full", "exp", "star"]))
+    @settings(max_examples=40, deadline=None)
+    def test_contraction_property(n, name):
+        """Assumption 4: ||XW - X̄||_F^2 <= (1-p) ||X - X̄||_F^2 for random X."""
+        w = topology.mixing_matrix(name, n)
+        p = topology.spectral_gap(w)
+        assert 0 <= p <= 1 + 1e-9
+        rng = np.random.default_rng(n)
+        x = rng.normal(size=(7, n))
+        xbar = x.mean(1, keepdims=True)
+        lhs = np.linalg.norm(x @ w - xbar) ** 2
+        rhs = (1 - p) * np.linalg.norm(x - xbar) ** 2
+        assert lhs <= rhs + 1e-8 * max(1.0, rhs)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_contraction_property():
+        pass
