@@ -1,0 +1,193 @@
+"""Round-epilogue microbenchmark: per-leaf dense vs fused vs pallas_packed.
+
+The gossip/correction/parameter-mixing epilogue (Algorithm 1 lines 7–11) is
+the per-round communication cost the paper optimizes.  This benchmark
+compares the three lowerings over a synthetic transformer-shaped client
+state:
+
+  * wall time of the jitted epilogue on this host (`pallas_packed` runs the
+    packed-xla oracle; `pallas_packed_interpret` runs the actual Pallas
+    kernel through the interpreter — kernel validation, not a speed claim);
+  * cross-client collective launches + bytes in the compiled HLO on a
+    4-fake-CPU-device clients mesh.  This runs in a subprocess because the
+    XLA host-device-count flag must precede jax's first backend init.
+
+CSV rows: ``gossip,impl=...,wall_ms=...`` and ``gossip,impl=...,collectives=...``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mixing as mixing_lib
+from repro.core import packing, topology
+from repro.core.kgt_minimax import _tree_axpy, _tree_sub
+from repro.kernels import ops as kernel_ops
+
+N_CLIENTS = 8
+ETA_S, CORR = 0.5, 12.5  # η_s and 1/(K·η_c) stand-ins
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def synthetic_state(n: int = N_CLIENTS, d_model: int = 64, layers: int = 2,
+                    seed: int = 0):
+    """Client-stacked transformer-shaped pytree (many leaves, ragged sizes)."""
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for i in range(layers):
+        key, *ks = jax.random.split(key, 8)
+        tree[f"layer{i}"] = {
+            "q": jax.random.normal(ks[0], (n, d_model, d_model)),
+            "k": jax.random.normal(ks[1], (n, d_model, d_model)),
+            "v": jax.random.normal(ks[2], (n, d_model, d_model)),
+            "o": jax.random.normal(ks[3], (n, d_model, d_model)),
+            "up": jax.random.normal(ks[4], (n, d_model, 4 * d_model)),
+            "down": jax.random.normal(ks[5], (n, 4 * d_model, d_model)),
+            "norm": jax.random.normal(ks[6], (n, d_model)),
+        }
+    return tree
+
+
+def epilogue_per_leaf(w, fused: bool):
+    """The per-leaf lowering of kgt_minimax.round_step: one (dense) or half
+    (fused: Δ and θ stacked into one collective) gossip launches per leaf,
+    then the per-leaf correction/mixing axpy cascade."""
+
+    def fn(dx, x, cx):
+        if fused:
+            pairs = jax.tree.map(lambda d, b: jnp.stack([d, b], axis=1), dx, x)
+            mixed = mixing_lib.mix_dense(pairs, w)
+            mdx = jax.tree.map(lambda p: p[:, 0], mixed)
+            mx = jax.tree.map(lambda p: p[:, 1], mixed)
+        else:
+            mdx = mixing_lib.mix_dense(dx, w)
+            mx = mixing_lib.mix_dense(x, w)
+        cx_new = _tree_axpy(CORR, _tree_sub(dx, mdx), cx)
+        x_new = _tree_axpy(ETA_S, mdx, mx)
+        return x_new, cx_new
+
+    return fn
+
+
+def epilogue_packed(w, backend: str):
+    """The fused-gossip round engine: ravel, one fused pass, unravel."""
+
+    def fn(dx, x, cx):
+        spec = packing.pack_spec(x)
+        spec_c = packing.pack_spec(cx)
+        xb, cb = kernel_ops.fused_gossip_round(
+            w, packing.pack(dx, spec), packing.pack(x, spec),
+            packing.pack(cx, spec_c), ETA_S, CORR, backend=backend)
+        return packing.unpack(xb, spec), packing.unpack(cb, spec_c)
+
+    return fn
+
+
+EPILOGUES = {
+    "dense": lambda w: epilogue_per_leaf(w, fused=False),
+    "fused": lambda w: epilogue_per_leaf(w, fused=True),
+    "pallas_packed": lambda w: epilogue_packed(w, "xla"),
+    "pallas_packed_interpret": lambda w: epilogue_packed(w, "interpret"),
+}
+
+
+def _time_ms(fn, args, reps: int) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def collective_counts_child() -> None:
+    """Child mode (fake 4-device mesh already forced via XLA_FLAGS): compile
+    each epilogue with the clients dim mesh-sharded and count collectives."""
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis import hlo_cost
+
+    n = 4
+    mesh = Mesh(np.array(jax.devices()[:n]), ("clients",))
+    w = jnp.asarray(topology.mixing_matrix("exp", n), jnp.float32)
+    x = synthetic_state(n=n, d_model=16, layers=2)
+    dx = jax.tree.map(lambda v: v * 0.01, x)
+    cx = jax.tree.map(jnp.zeros_like, x)
+    shard = jax.tree.map(lambda v: NamedSharding(mesh, P("clients")), x)
+
+    out = {}
+    for name in ("dense", "fused", "pallas_packed"):
+        fn = jax.jit(EPILOGUES[name](w), in_shardings=(shard, shard, shard))
+        txt = fn.lower(dx, x, cx).compile().as_text()
+        cost = hlo_cost.analyze(txt)
+        out[name] = {
+            "collectives": int(sum(cost.collective_counts.values())),
+            "by_kind": {k: int(v) for k, v in cost.collective_counts.items()
+                        if v},
+            "collective_mb": round(cost.total_collective_bytes() / 1e6, 3),
+        }
+    print("JSON:" + json.dumps(out), flush=True)
+
+
+def _collectives_via_subprocess() -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_gossip", "--collectives-child"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"collectives child failed:\n{proc.stdout[-2000:]}"
+                           f"\n{proc.stderr[-2000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("JSON:"):
+            return json.loads(line[len("JSON:"):])
+    raise RuntimeError(f"no JSON line in child output: {proc.stdout[-500:]}")
+
+
+def run(csv=print) -> dict:
+    w = jnp.asarray(topology.mixing_matrix("exp", N_CLIENTS), jnp.float32)
+    x = synthetic_state()
+    dx = jax.tree.map(lambda v: v * 0.01, x)
+    cx = jax.tree.map(jnp.zeros_like, x)
+    spec = packing.pack_spec(x)
+    results: dict = {"n": N_CLIENTS, "leaves": len(jax.tree.leaves(x)),
+                     "packed_D": spec.dim}
+
+    for name, builder in EPILOGUES.items():
+        reps = 2 if name.endswith("interpret") else 20
+        ms = _time_ms(jax.jit(builder(w)), (dx, x, cx), reps)
+        csv(f"gossip,impl={name},wall_ms={ms:.2f},n={N_CLIENTS},"
+            f"leaves={results['leaves']},packed_D={spec.dim}")
+        results[name] = {"wall_ms": round(ms, 3)}
+
+    for name, c in _collectives_via_subprocess().items():
+        kinds = ";".join(f"{k}:{v}" for k, v in sorted(c["by_kind"].items()))
+        csv(f"gossip,impl={name},collectives={c['collectives']},"
+            f"collective_mb={c['collective_mb']},kinds={kinds}")
+        results.setdefault(name, {}).update(c)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--collectives-child", action="store_true")
+    args = ap.parse_args()
+    if args.collectives_child:
+        collective_counts_child()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ import time
 
 from benchmarks import (
     bench_convergence,
+    bench_gossip,
     bench_heterogeneity,
     bench_local_steps,
     bench_speedup,
@@ -28,6 +29,7 @@ BENCHES = {
     "heterogeneity": bench_heterogeneity.run,  # V3: DH robustness
     "topology": bench_topology.run,            # V4: T vs p
     "speedup": bench_speedup.run,              # V5: linear speedup in n
+    "gossip": bench_gossip.run,                # round-epilogue lowerings
     "roofline": roofline.run,                  # deliverable (g)
 }
 
@@ -46,8 +48,19 @@ def main() -> None:
             continue
         print(f"{name},wall_s={time.time()-t0:.1f}", flush=True)
     os.makedirs("/root/repo/results", exist_ok=True)
-    with open("/root/repo/results/benchmarks.json", "w") as f:
-        json.dump(results, f, indent=1, default=str)
+    path = "/root/repo/results/benchmarks.json"
+    # merge into existing results so partial runs (e.g. `run gossip` in CI)
+    # don't clobber earlier benchmarks
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(results)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1, default=str)
 
 
 if __name__ == "__main__":

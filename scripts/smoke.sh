@@ -7,6 +7,10 @@
 #      builds + jit-compiles the K-GT-Minimax train round on a
 #      (clients=2, fsdp=2, model=2) mesh and prefill/decode on a
 #      (data=4, model=2) mesh, exercising repro.dist shardings end-to-end.
+#   3. benchmarks.run gossip — the round-epilogue bench: times the
+#      dense/fused/pallas_packed lowerings (incl. the Pallas kernel in
+#      interpret mode) and counts collectives on a 4-fake-device clients
+#      mesh, so the bench + kernel path can't rot.
 #
 # Usage: scripts/smoke.sh [--archs ARCH ...]     (default: qwen2-0.5b)
 set -euo pipefail
@@ -19,5 +23,8 @@ echo "collection ok"
 
 echo "== step programs compile on fake CPU mesh =="
 python -m repro.launch.smoke "$@"
+
+echo "== gossip round-epilogue bench (fake-device mesh collectives) =="
+python -m benchmarks.run gossip
 
 echo "smoke ok"

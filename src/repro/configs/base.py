@@ -198,8 +198,14 @@ class AlgorithmConfig:
     eta_sy: float = 1.0             # communication stepsize for y
     topology: str = "ring"          # ring | torus | full | exp | star
     # Gossip implementation: "dense" (faithful W-einsum), "ring" (ppermute),
-    # "fused_dense"/"fused_ring" (single Delta exchange reused for correction+mixing).
+    # "fused_dense"/"fused_ring" (pack Delta+params into one collective per
+    # leaf), "pallas_packed" (ravel the whole state into one (n, D) buffer and
+    # run the fused gossip/correction/mixing epilogue in a single pass —
+    # see repro.core.packing + repro.kernels.gossip).
     mixing_impl: str = "dense"
+    # Backend for the pallas_packed epilogue: "auto" (Pallas kernel on TPU,
+    # packed-xla oracle elsewhere), "pallas", "interpret", or "xla".
+    gossip_backend: str = "auto"
     gossip_dtype: str = "float32"   # beyond-paper: "bfloat16" halves gossip bytes
     # Inner optimizer applied to local steps ("sgd" is the faithful Algorithm 1).
     inner_opt: str = "sgd"

@@ -6,7 +6,14 @@ from repro.core.kgt_minimax import (  # noqa: F401
     mean_over_clients,
 )
 from repro.core.minimax import MinimaxProblem  # noqa: F401
-from repro.core.mixing import consensus_error, make_mixer, mix_dense, mix_ring  # noqa: F401
+from repro.core.mixing import (  # noqa: F401
+    consensus_error,
+    make_mixer,
+    mix_dense,
+    mix_packed,
+    mix_ring,
+)
+from repro.core.packing import PackSpec, pack, pack_spec, unpack  # noqa: F401
 from repro.core.objectives import (  # noqa: F401
     adversarial_problem,
     dro_problem,

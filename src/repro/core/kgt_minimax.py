@@ -31,8 +31,10 @@ import numpy as np
 
 from repro.configs.base import AlgorithmConfig
 from repro.core import mixing as mixing_lib
+from repro.core import packing
 from repro.core import topology as topo_lib
 from repro.core.minimax import MinimaxProblem
+from repro.kernels import ops as kernel_ops
 
 
 @jax.tree_util.register_dataclass
@@ -110,33 +112,56 @@ def make_round_step(
     client).  ``keys``: (K, n) PRNG keys.  ``lr_scale``: optional schedule
     multiplier as a function of the round index.
     """
+    if cfg.mixing_impl not in mixing_lib.MIXING_IMPLS:
+        raise ValueError(
+            f"unknown mixing_impl {cfg.mixing_impl!r}: {mixing_lib.MIXING_IMPLS}")
+    if cfg.topology_cycle and cfg.mixing_impl.endswith("ring"):
+        # the time-varying path lowers gossip densely per round; a
+        # neighbor-only ring exchange cannot realize arbitrary cycle members
+        raise ValueError(
+            f"mixing_impl={cfg.mixing_impl!r} is not supported with "
+            "topology_cycle; use 'dense', 'fused_dense', or 'pallas_packed'")
+    packed = cfg.mixing_impl == "pallas_packed"
+    pack_gd = (None if cfg.gossip_dtype in (None, "float32")
+               else jnp.dtype(cfg.gossip_dtype))
     if cfg.topology_cycle:
         # time-varying gossip: W selected per round from the cycle
         ws = jnp.stack([
             jnp.asarray(topo_lib.mixing_matrix(t, cfg.num_clients), jnp.float32)
             for t in cfg.topology_cycle])
-        gd = (None if cfg.gossip_dtype in (None, "float32")
-              else jnp.dtype(cfg.gossip_dtype))
+        gd = pack_gd
+        get_w = lambda round_idx: ws[round_idx % len(cfg.topology_cycle)]
 
         def make_mix(round_idx):
-            w_t = ws[round_idx % len(cfg.topology_cycle)]
+            w_t = get_w(round_idx)
             return lambda tree: mixing_lib.mix_dense(tree, w_t, gossip_dtype=gd)
     else:
         if w is None:
             w = topo_lib.mixing_matrix(cfg.topology, cfg.num_clients)
-        static_mix = mixing_lib.make_mixer(
-            cfg.topology, cfg.mixing_impl, w, cfg.gossip_dtype)
-        make_mix = lambda round_idx: static_mix
+        w_arr = jnp.asarray(w, jnp.float32)
+        get_w = lambda round_idx: w_arr
+        if packed:
+            make_mix = None  # the packed epilogue consumes W directly
+        else:
+            static_mix = mixing_lib.make_mixer(
+                cfg.topology, cfg.mixing_impl, w, cfg.gossip_dtype)
+            make_mix = lambda round_idx: static_mix
+    gossip_backend = kernel_ops.resolve_gossip_backend(cfg.gossip_backend)
     algo = cfg.algorithm
     track = algo in ("kgt_minimax", "gt_gda")
     k_steps = 1 if algo in ("dsgda", "gt_gda") else cfg.local_steps
     grads_v = jax.vmap(problem.grads)
 
+    # Communication stepsizes (η_s = 1 for the no-tracking baselines: plain
+    # parameter averaging x ← W(x + Δx)).
+    eta_sx = cfg.eta_sx if cfg.algorithm in ("kgt_minimax", "gt_gda") else 1.0
+    eta_sy = cfg.eta_sy if cfg.algorithm in ("kgt_minimax", "gt_gda") else 1.0
+
     def round_step(state: KGTState, batches, keys) -> KGTState:
         scale = lr_scale(state.round) if lr_scale is not None else 1.0
         eta_cx = cfg.eta_cx * scale
         eta_cy = cfg.eta_cy * scale
-        mix = make_mix(state.round)
+        mix = None if packed else make_mix(state.round)
 
         def local_step(carry, inp):
             xx, yy = carry
@@ -156,6 +181,48 @@ def make_round_step(
         dx = _tree_sub(xk, state.x)   # Δx = x^{(t)+K} − x^{(t)}
         dy = _tree_sub(yk, state.y)
 
+        if packed:
+            # Whole-state lowering: ravel each variable into one (n, D)
+            # buffer and run the entire round epilogue (lines 7-11) as one
+            # fused pass — θ_new = Wθ + η_s·WΔ and c += ±(Δ − WΔ)/(K·η_c)
+            # computed together, one collective per variable instead of one
+            # (or two) per leaf.  See repro.kernels.{gossip,ops}.
+            w_t = get_w(state.round)
+            spec_x = packing.pack_spec(state.x)
+            spec_y = packing.pack_spec(state.y)
+            if not track:
+                # no correction state: the epilogue degenerates to a single
+                # gossip of the already-stepped parameters, W(θ + η_s·Δ) —
+                # don't move (n, D) correction buffers through the kernel
+                # just to multiply them by zero
+                xb = mixing_lib.mix_dense(
+                    packing.pack(state.x, spec_x)
+                    + eta_sx * packing.pack(dx, spec_x), w_t, gossip_dtype=pack_gd)
+                yb = mixing_lib.mix_dense(
+                    packing.pack(state.y, spec_y)
+                    + eta_sy * packing.pack(dy, spec_y), w_t, gossip_dtype=pack_gd)
+                return KGTState(
+                    x=packing.unpack(xb, spec_x), y=packing.unpack(yb, spec_y),
+                    cx=state.cx, cy=state.cy, round=state.round + 1)
+            corr_x = 1.0 / (k_steps * eta_cx)
+            corr_y = -1.0 / (k_steps * eta_cy)
+            spec_cx = packing.pack_spec(state.cx)
+            spec_cy = packing.pack_spec(state.cy)
+            xb, cxb = kernel_ops.fused_gossip_round(
+                w_t, packing.pack(dx, spec_x), packing.pack(state.x, spec_x),
+                packing.pack(state.cx, spec_cx), eta_sx, corr_x,
+                backend=gossip_backend, gossip_dtype=cfg.gossip_dtype)
+            yb, cyb = kernel_ops.fused_gossip_round(
+                w_t, packing.pack(dy, spec_y), packing.pack(state.y, spec_y),
+                packing.pack(state.cy, spec_cy), eta_sy, corr_y,
+                backend=gossip_backend, gossip_dtype=cfg.gossip_dtype)
+            return KGTState(
+                x=packing.unpack(xb, spec_x),
+                y=packing.unpack(yb, spec_y),
+                cx=packing.unpack(cxb, spec_cx),
+                cy=packing.unpack(cyb, spec_cy),
+                round=state.round + 1)
+
         # Algorithm 1 communicates two quantities per variable per round:
         # Δ (lines 7-8) and the parameters (lines 10-11).  The faithful
         # implementation issues two gossips; the "fused_*" variants PACK both
@@ -163,11 +230,11 @@ def make_round_step(
         # launches — beyond-paper, bit-identical).
         if cfg.mixing_impl.startswith("fused"):
             def pack_mix(delta, base):
-                packed = jax.tree.map(
+                pairs = jax.tree.map(
                     lambda d, b: jnp.stack([d.astype(jnp.float32),
                                             b.astype(jnp.float32)], axis=1),
                     delta, base)
-                mixed = mix(packed)
+                mixed = mix(pairs)
                 md = jax.tree.map(lambda p: p[:, 0], mixed)
                 mb = jax.tree.map(lambda p: p[:, 1], mixed)
                 return md, mb
@@ -186,8 +253,6 @@ def make_round_step(
             cx, cy = state.cx, state.cy
 
         # x ← W(x + η_s Δx) = Wx + η_s·WΔx   (second gossip: the parameters)
-        eta_sx = cfg.eta_sx if algo in ("kgt_minimax", "gt_gda") else 1.0
-        eta_sy = cfg.eta_sy if algo in ("kgt_minimax", "gt_gda") else 1.0
         x_new = _tree_axpy(eta_sx, mdx, mx)
         y_new = _tree_axpy(eta_sy, mdy, my)
 

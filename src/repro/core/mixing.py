@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packing
+
 
 def _cast(tree, dtype):
     if dtype is None:
@@ -75,14 +77,40 @@ def mix_ring(tree: Any, w_self: float, w_nbr: float, gossip_dtype=None) -> Any:
     return jax.tree.map(one, tree)
 
 
+def mix_packed(tree: Any, w, gossip_dtype=None) -> Any:
+    """One gossip for the whole pytree: ravel to (n, D), mix, unravel.
+
+    Same math as ``mix_dense`` per leaf, but a single contraction over the
+    packed buffer — one collective for the entire state instead of one per
+    leaf.  The round-step path goes further (repro.kernels.ops
+    ``fused_gossip_round`` fuses the correction/mixing epilogue too); this
+    tree-level form serves generic callers.
+    """
+    spec = packing.pack_spec(tree)
+    mixed = mix_dense(packing.pack(tree, spec), w, gossip_dtype=gossip_dtype)
+    return packing.unpack(mixed, spec)
+
+
+MIXING_IMPLS = ("dense", "ring", "fused_dense", "fused_ring", "pallas_packed")
+
+
 def make_mixer(topology: str, impl: str, w: np.ndarray, gossip_dtype: str = "float32"):
     """Returns mix(tree) -> tree for the configured implementation."""
+    if impl not in MIXING_IMPLS:
+        raise ValueError(f"unknown mixing_impl {impl!r}: {MIXING_IMPLS}")
     gd = None if gossip_dtype in (None, "float32") else jnp.dtype(gossip_dtype)
-    if impl.endswith("ring") and topology == "ring":
+    if impl.endswith("ring"):
+        if topology != "ring":
+            raise ValueError(
+                f"mixing_impl={impl!r} is a neighbor-only exchange, valid "
+                f"only for topology='ring' (got {topology!r}); use 'dense', "
+                f"'fused_dense', or 'pallas_packed' for arbitrary W")
         n = w.shape[0]
         w_self = float(w[0, 0])
         w_nbr = float(w[0, 1 % n]) if n > 1 else 0.0
         return lambda tree: mix_ring(tree, w_self, w_nbr, gossip_dtype=gd)
+    if impl == "pallas_packed":
+        return lambda tree: mix_packed(tree, w, gossip_dtype=gd)
     return lambda tree: mix_dense(tree, w, gossip_dtype=gd)
 
 

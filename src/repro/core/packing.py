@@ -1,0 +1,82 @@
+"""Ravel a client-stacked pytree into one contiguous ``(n, D)`` buffer.
+
+Every K-GT-Minimax state variable is a pytree whose leaves carry a leading
+clients dim ``n`` (``x: (n, …)``, corrections likewise).  The round epilogue
+(gossip + correction + parameter mixing) is linear over clients, so instead
+of issuing one gossip per leaf it can operate on a single packed ``(n, D)``
+f32 buffer: each leaf is reshaped to ``(n, -1)`` and concatenated along the
+feature axis at a fixed per-leaf offset.  ``PackSpec`` remembers the layout
+(treedef, per-leaf trailing shape, dtype, offset) so ``unpack`` restores the
+original structure bit-for-bit in shape and dtype.
+
+Packing is pure jnp (traceable under jit); under GSPMD the buffer keeps the
+leading dim on the ``clients`` mesh axis, so a single collective moves the
+whole state where the per-leaf path launched one per leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PACK_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Layout of a packed buffer: where each leaf lives and what it was."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]   # per-leaf trailing shape (no n)
+    dtypes: Tuple[Any, ...]               # per-leaf original dtype
+    offsets: Tuple[int, ...]              # per-leaf start column
+    sizes: Tuple[int, ...]                # per-leaf column count
+    n: int                                # leading clients dim
+    dim: int                              # total packed width D
+
+
+def pack_spec(tree: Any) -> PackSpec:
+    """Layout for ``tree`` (concrete arrays or ShapeDtypeStructs)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot pack an empty pytree")
+    n = leaves[0].shape[0]
+    shapes, dtypes, offsets, sizes = [], [], [], []
+    off = 0
+    for leaf in leaves:
+        if leaf.ndim < 1 or leaf.shape[0] != n:
+            raise ValueError(
+                f"every leaf needs the same leading clients dim {n}, "
+                f"got shape {leaf.shape}")
+        size = 1
+        for s in leaf.shape[1:]:
+            size *= s
+        shapes.append(tuple(leaf.shape[1:]))
+        dtypes.append(jnp.dtype(leaf.dtype))
+        offsets.append(off)
+        sizes.append(size)
+        off += size
+    return PackSpec(treedef=treedef, shapes=tuple(shapes), dtypes=tuple(dtypes),
+                    offsets=tuple(offsets), sizes=tuple(sizes), n=n, dim=off)
+
+
+def pack(tree: Any, spec: PackSpec | None = None) -> jnp.ndarray:
+    """Ravel ``tree`` into an ``(n, D)`` f32 buffer (leaf order = tree order)."""
+    spec = spec or pack_spec(tree)
+    leaves = jax.tree.leaves(tree)
+    cols = [leaf.reshape(spec.n, -1).astype(PACK_DTYPE) for leaf in leaves]
+    return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+
+
+def unpack(buf: jnp.ndarray, spec: PackSpec) -> Any:
+    """Inverse of ``pack``: restore leaf shapes and original dtypes."""
+    if buf.shape != (spec.n, spec.dim):
+        raise ValueError(f"buffer {buf.shape} does not match spec "
+                         f"({spec.n}, {spec.dim})")
+    leaves = [
+        buf[:, off:off + size].reshape(spec.n, *shape).astype(dtype)
+        for off, size, shape, dtype
+        in zip(spec.offsets, spec.sizes, spec.shapes, spec.dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import gossip as gossip_lib
 from repro.kernels import ref as ref_lib
 from repro.kernels import rglru_scan as rg
 from repro.kernels import ssd_scan as ssd
@@ -82,6 +83,59 @@ def fused_cross_entropy(hidden, weight, labels, *, block_t: int = 128,
 
     return ce.fused_ce_nd(hidden, weight, labels, block_t=block_t,
                           block_v=block_v, interpret=(backend == "interpret"))
+
+
+GOSSIP_BACKENDS = ("auto", "pallas", "interpret", "xla")
+
+
+def resolve_gossip_backend(backend: str) -> str:
+    """"auto" -> the Pallas kernel on TPU, the packed-xla oracle elsewhere
+    (interpret mode is for validation, far too slow for training loops; the
+    xla oracle still gets the packed single-collective lowering on a mesh)."""
+    if backend not in GOSSIP_BACKENDS:
+        raise ValueError(f"unknown gossip_backend {backend!r}: {GOSSIP_BACKENDS}")
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@partial(jax.jit, static_argnames=("backend", "block_d", "gossip_dtype"))
+def fused_gossip_round(w, delta, theta, c, eta_s, corr_scale, *,
+                       backend: str = "interpret", block_d: int = 512,
+                       gossip_dtype=None):
+    """Fused round epilogue over packed client state.
+
+    w: (n, n); delta/theta/c: (n, D).  Returns f32
+    (θ_new, c_new) = (Wθ + η_s·WΔ, c + corr_scale·(Δ − WΔ)).
+
+    ``gossip_dtype`` (None/str) narrows the matmul operands only.  The
+    pallas/interpret path pads n to the f32 sublane multiple (8) and D to
+    the block multiple with zeros — zero-padded W rows/cols contribute
+    nothing — and slices back to (n, D).
+    """
+    gd = (None if gossip_dtype in (None, "float32")
+          else jnp.dtype(gossip_dtype))
+    eta_s = jnp.float32(eta_s)
+    corr_scale = jnp.float32(corr_scale)
+    if backend == "xla":
+        return ref_lib.fused_gossip_ref(w, delta, theta, c, eta_s,
+                                        corr_scale, gossip_dtype=gd)
+    n, d = delta.shape
+    w = jnp.asarray(w, jnp.float32)
+    wp, _ = _pad_to(w, 0, 8)
+    wp, _ = _pad_to(wp, 1, 8)
+    blk = min(block_d, max(128, -(-d // 128) * 128))
+
+    def prep(x):
+        x, _ = _pad_to(x.astype(jnp.float32), 0, 8)
+        x, _ = _pad_to(x, 1, blk)
+        return x
+
+    scalars = jnp.stack([eta_s, corr_scale])
+    theta_new, c_new = gossip_lib.fused_gossip_nd(
+        wp, prep(delta), prep(theta), prep(c), scalars, block_d=blk,
+        gossip_dtype=gd, interpret=(backend == "interpret"))
+    return theta_new[:n, :d], c_new[:n, :d]
 
 
 @partial(jax.jit, static_argnames=("chunk", "backend"))

@@ -60,6 +60,31 @@ def fused_ce_ref(hidden, weight, labels):
     return -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
 
 
+def fused_gossip_ref(w, delta, theta, c, eta_s, corr_scale, *,
+                     gossip_dtype=None):
+    """Packed round-epilogue oracle (Algorithm 1 lines 7–11 for one variable).
+
+    w: (n, n); delta/theta/c: (n, D) f32.  Mirrors ``mixing.mix_dense``'s
+    dtype rules: the matmul operands are narrowed to ``gossip_dtype`` (the
+    communicated values), accumulation is f32, and Δ stays f32 inside the
+    correction.  Returns (θ_new, c_new) = (Wθ + η_s·WΔ, c + s·(Δ − WΔ)).
+    """
+    w = jnp.asarray(w, jnp.float32)
+    d32 = delta.astype(jnp.float32)
+    t32 = theta.astype(jnp.float32)
+    if gossip_dtype is None:
+        wg, dg, tg = w, d32, t32
+    else:
+        wg = w.astype(gossip_dtype)
+        dg = d32.astype(gossip_dtype)
+        tg = t32.astype(gossip_dtype)
+    wd = jnp.einsum("ij,jd->id", wg, dg, preferred_element_type=jnp.float32)
+    wt = jnp.einsum("ij,jd->id", wg, tg, preferred_element_type=jnp.float32)
+    theta_new = wt + eta_s * wd
+    c_new = c.astype(jnp.float32) + corr_scale * (d32 - wd)
+    return theta_new, c_new
+
+
 def rglru_ref(a, u):
     """Token-by-token h_t = a_t h_{t-1} + u_t.  a, u: (B,S,W)."""
 

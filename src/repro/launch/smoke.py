@@ -22,6 +22,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.smoke [--archs qwen2-0.5b ...]
 """
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -58,6 +59,23 @@ def smoke_arch(arch: str) -> bool:
     except Exception as e:
         ok = False
         print(f"[smoke] {arch}: train FAILED: {type(e).__name__}: {e}",
+              flush=True)
+
+    # the packed fused-gossip round must also lower under GSPMD (one
+    # collective per variable instead of one per leaf — see
+    # repro.core.packing / repro.kernels.gossip)
+    t0 = time.time()
+    packed_algo = dataclasses.replace(algo, mixing_impl="pallas_packed")
+    try:
+        with compat.use_mesh(mesh):
+            jitted, state_sds, batch_sds, key_sds, _ = steps_lib.build_train_round(
+                cfg, TRAIN_SHAPE, mesh, mcfg, algo=packed_algo)
+            jitted.lower(state_sds, batch_sds, key_sds).compile()
+        print(f"[smoke] {arch}: packed-gossip train round compiled "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    except Exception as e:
+        ok = False
+        print(f"[smoke] {arch}: packed train FAILED: {type(e).__name__}: {e}",
               flush=True)
 
     t0 = time.time()

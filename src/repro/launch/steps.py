@@ -52,6 +52,12 @@ def build_train_round(
     """
     algo = algo or AlgorithmConfig(num_clients=mcfg.num_clients)
     algo = dataclasses.replace(algo, num_clients=mcfg.num_clients)
+    if algo.mixing_impl == "pallas_packed" and algo.gossip_backend == "auto":
+        # Under GSPMD the clients dim is mesh-sharded and pallas_call is not
+        # SPMD-partitioned over it; the packed-xla oracle keeps the
+        # one-collective-per-variable lowering, which is the win at mesh
+        # scale.  The Pallas kernel itself is the single-chip epilogue path.
+        algo = dataclasses.replace(algo, gossip_backend="xla")
     minimax = minimax or MinimaxConfig()
     n, k_steps = algo.num_clients, algo.local_steps
     assert shape.global_batch % n == 0, (shape.global_batch, n)

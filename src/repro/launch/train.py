@@ -47,6 +47,8 @@ def train(args) -> dict:
         topology=args.topology,
         mixing_impl=args.mixing_impl,
         gossip_dtype=args.gossip_dtype,
+        # getattr: programmatic callers (tests) build a bare Namespace
+        gossip_backend=getattr(args, "gossip_backend", "auto"),
     )
     minimax = MinimaxConfig(num_groups=args.groups, mu=args.mu)
 
@@ -165,8 +167,15 @@ def main() -> None:
                     help="host: plain single-device jit; decentralized: the "
                          "repro.dist-sharded round over the local device mesh")
     ap.add_argument("--topology", default="ring")
-    ap.add_argument("--mixing-impl", default="dense")
+    from repro.kernels.ops import GOSSIP_BACKENDS
+
+    ap.add_argument("--mixing-impl", default="dense",
+                    choices=list(mixing_lib.MIXING_IMPLS))
     ap.add_argument("--gossip-dtype", default="float32")
+    ap.add_argument("--gossip-backend", default="auto",
+                    choices=list(GOSSIP_BACKENDS),
+                    help="pallas_packed epilogue backend (auto: Pallas "
+                         "kernel on TPU, packed-xla oracle elsewhere)")
     ap.add_argument("--schedule", default="constant")
     ap.add_argument("--warmup", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)

@@ -120,6 +120,93 @@ def test_ring_impl_matches_dense_trajectory():
     np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-5)
 
 
+def test_fused_pack_is_bit_identical_to_two_gossips():
+    """Regression for the claim in kgt_minimax.py: the fused_* variants pack
+    both gossips into one collective per leaf with *bit-identical* results —
+    stacking (Δ, base) along a new axis must not change the contraction."""
+    outs = {}
+    for impl in ("dense", "fused_dense"):
+        prob, cfg, st, step, kb = _setup(sigma=0.3, mixing_impl=impl)
+        outs[impl] = _run(st, step, kb, 4, 8, 10)
+    for name in ("x", "y", "cx", "cy"):
+        for a, b in zip(jax.tree.leaves(getattr(outs["dense"], name)),
+                        jax.tree.leaves(getattr(outs["fused_dense"], name))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+def doubly_stochastic_w(n: int, seed: int) -> np.ndarray:
+    """Random symmetric doubly-stochastic W (symmetrized Sinkhorn), beyond
+    the named topologies.  Shared with the hypothesis suite in
+    test_property.py."""
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.1, 1.0, (n, n))
+    a = a + a.T + n * np.eye(n)
+    for _ in range(200):
+        a = a / a.sum(1, keepdims=True)
+        a = (a + a.T) / 2
+    assert np.allclose(a.sum(1), 1.0, atol=1e-9) and np.allclose(a, a.T)
+    return a
+
+
+def check_round_mean_dynamics(algo, n, k, seed, mixing_impl="dense"):
+    """One round_step under any doubly-stochastic W: the client mean of x/y
+    evolves exactly as under W = J (mixing preserves the mean), and Lemma 8's
+    Σ_i c_i = 0 invariant holds."""
+    w = doubly_stochastic_w(n, seed)
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=5, dy=3, heterogeneity=2.0)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(algorithm=algo, num_clients=n, local_steps=k,
+                          eta_cx=0.01, eta_cy=0.05, eta_sx=0.4, eta_sy=0.4,
+                          mixing_impl=mixing_impl, gossip_backend="xla")
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    st = init_state(prob, cfg, key, init_batch=cb,
+                    init_keys=jax.random.split(key, n))
+    step_w = make_round_step(prob, cfg, w)
+    step_j = make_round_step(prob, cfg, np.full((n, n), 1.0 / n))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), k * n).reshape(k, n, 2)
+    st_w = step_w(st, kb, keys)
+    st_j = step_j(st, kb, keys)
+    np.testing.assert_allclose(mean_over_clients(st_w.x),
+                               mean_over_clients(st_j.x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(mean_over_clients(st_w.y),
+                               mean_over_clients(st_j.y),
+                               rtol=1e-5, atol=1e-5)
+    for c in (st_w.cx, st_w.cy):
+        mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
+        assert float(jnp.abs(mean_c).max()) < 1e-4
+
+
+@pytest.mark.parametrize("algo", ["kgt_minimax", "dsgda", "local_sgda", "gt_gda"])
+@pytest.mark.parametrize("mixing_impl", ["dense", "pallas_packed"])
+def test_round_mean_dynamics_under_random_doubly_stochastic_w(algo, mixing_impl):
+    """Deterministic cousin of the hypothesis property in test_property.py
+    (which is skipped where hypothesis is not installed)."""
+    check_round_mean_dynamics(algo, n=6, k=3, seed=11, mixing_impl=mixing_impl)
+
+
+def test_make_round_step_validates_mixing_impl():
+    """The impl/topology pairing is validated on BOTH branches — including
+    topology_cycle, which lowers gossip densely and ignores make_mixer."""
+    key = jax.random.PRNGKey(0)
+    data = make_quadratic_data(key, 4, dx=4, dy=2)
+    prob = quadratic_problem(data, sigma=0.0)
+    for cfg in (
+        AlgorithmConfig(num_clients=4, mixing_impl="bogus"),
+        AlgorithmConfig(num_clients=4, mixing_impl="bogus",
+                        topology_cycle=("ring", "full")),
+        AlgorithmConfig(num_clients=4, mixing_impl="ring",
+                        topology_cycle=("ring", "full")),
+        AlgorithmConfig(num_clients=4, mixing_impl="fused_ring",
+                        topology="exp"),
+    ):
+        with pytest.raises(ValueError):
+            make_round_step(prob, cfg)
+
+
 def test_consensus_reached_from_identical_init():
     prob, cfg, st, step, kb = _setup(sigma=0.0, heterogeneity=0.0)
     st = _run(st, step, kb, 4, 8, 100)

@@ -55,8 +55,36 @@ def test_bf16_gossip_close_to_f32():
 def test_make_mixer_dispatch():
     w = topology.mixing_matrix("ring", 4)
     tree = _tree(4, jax.random.PRNGKey(4))
-    for impl in ("dense", "ring", "fused_ring"):
+    for impl in ("dense", "ring", "fused_ring", "pallas_packed"):
         out = mixing.make_mixer("ring", impl, w)(tree)
         np.testing.assert_allclose(
             jax.tree.leaves(out)[0], jax.tree.leaves(mixing.mix_dense(tree, w))[0],
             rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["ring", "fused_ring"])
+@pytest.mark.parametrize("topo", ["full", "exp", "torus", "star"])
+def test_make_mixer_rejects_ring_impl_on_non_ring_topology(impl, topo):
+    """Previously this silently fell back to dense — wrong impl, right
+    numbers — masking a misconfiguration.  Now it raises."""
+    n = 4
+    w = topology.mixing_matrix(topo, n)
+    with pytest.raises(ValueError, match="ring"):
+        mixing.make_mixer(topo, impl, w)
+
+
+def test_make_mixer_rejects_unknown_impl():
+    w = topology.mixing_matrix("ring", 4)
+    with pytest.raises(ValueError, match="unknown mixing_impl"):
+        mixing.make_mixer("ring", "bogus", w)
+
+
+def test_mix_packed_matches_per_leaf_dense():
+    n = 8
+    w = topology.mixing_matrix("exp", n)
+    tree = _tree(n, jax.random.PRNGKey(5))
+    packed = mixing.mix_packed(tree, w)
+    dense = mixing.mix_dense(tree, w)
+    for a, b in zip(jax.tree.leaves(packed), jax.tree.leaves(dense)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

@@ -83,6 +83,34 @@ def test_rglru_kernel_property(b, s, w, seed):
     np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
 
 
+@given(algo=st.sampled_from(["kgt_minimax", "dsgda", "local_sgda", "gt_gda"]),
+       n=st.integers(2, 8), k=st.integers(1, 4), seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_round_step_invariants_any_doubly_stochastic_w(algo, n, k, seed):
+    """One full round_step under an arbitrary (random, symmetric) doubly-
+    stochastic W — not just the named topologies — preserves the client-mean
+    dynamics of x and y (x̄ evolves exactly as under W = J) and keeps
+    Σ_i c_i ≈ 0 (Lemma 8), for all four algorithm variants.
+
+    ``doubly_stochastic_w`` / ``check_round_mean_dynamics`` live in
+    test_kgt.py, where a deterministic cousin of this test runs even where
+    hypothesis is unavailable.
+    """
+    from test_kgt import check_round_mean_dynamics
+
+    check_round_mean_dynamics(algo, n=n, k=k, seed=seed)
+
+
+@given(n=st.sampled_from([2, 4, 8]), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_packed_round_invariants_any_doubly_stochastic_w(n, seed):
+    """Same invariants through the pallas_packed fused round engine."""
+    from test_kgt import check_round_mean_dynamics
+
+    check_round_mean_dynamics("kgt_minimax", n=n, k=2, seed=seed,
+                              mixing_impl="pallas_packed")
+
+
 @given(seed=st.integers(0, 30))
 @settings(max_examples=10, deadline=None)
 def test_round_step_average_dynamics_fullmesh(seed):
