@@ -1,6 +1,11 @@
 """Table-1 proxy: rounds-to-ε for K-GT-Minimax vs the baseline family on the
 same heterogeneous NC-SC problem (paper claim: decentralized + local updates
-+ heterogeneity robustness simultaneously)."""
++ heterogeneity robustness simultaneously).
+
+Runs through the ``repro.engine`` chunked scan — one compiled program per
+evaluation interval, ∇Φ checked on the chunk-boundary state (the same
+rounds-to-ε grid as the historical per-round loop; see
+``benchmarks.common.run_to_epsilon``)."""
 from __future__ import annotations
 
 from benchmarks.common import run_to_epsilon

@@ -1,5 +1,9 @@
 """V5: linear speedup in n on the stochastic term — at fixed target accuracy
-in the noise-dominated regime, rounds-to-ε improves with client count."""
+in the noise-dominated regime, rounds-to-ε improves with client count.
+
+Runs through the ``repro.engine`` chunked scan — 4000-round budgets × 4
+client counts are exactly the dispatch-bound regime the engine amortizes
+(see ``benchmarks.common.run_to_epsilon`` for the evaluation grid)."""
 from __future__ import annotations
 
 from benchmarks.common import run_to_epsilon

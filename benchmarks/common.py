@@ -4,6 +4,15 @@ All benchmarks run the synthetic NC-SC quadratic (exact ∇Φ oracle) because
 the paper's claims are about convergence/communication complexity, not about
 any particular model.  Each benchmark emits CSV rows and returns a dict for
 EXPERIMENTS.md.
+
+Execution goes through ``repro.engine``: rounds run as compiled
+``eval_every``-long scan chunks (one dispatch per evaluation interval
+instead of one per round), with the exact ∇Φ oracle evaluated on the
+chunk-boundary state — the same grid the historical per-round loop used
+(after eval_every, 2·eval_every, … rounds) with an immediate stop at the
+first grid point under eps.  One deliberate delta: when ``eval_every``
+does not divide ``max_rounds``, the run's final state is also evaluated
+(the old loop left a tail of rounds unmeasured).
 """
 from __future__ import annotations
 
@@ -11,14 +20,14 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro import engine as engine_lib
 from repro.configs.base import AlgorithmConfig
 from repro.core import (
-    diagnostics,
     init_state,
     make_quadratic_data,
     make_round_step,
+    mean_over_clients,
     quadratic_problem,
 )
 
@@ -52,25 +61,28 @@ def run_to_epsilon(
     cb = {k: v for k, v in data.items() if k != "mu"}
     kb = jax.tree.map(
         lambda v: jnp.broadcast_to(v[None], (cfg.local_steps, *v.shape)), cb)
-    k_eff = cfg.local_steps
     st = init_state(prob, cfg, key, init_batch=cb,
                     init_keys=jax.random.split(key, n))
-    step = jax.jit(make_round_step(prob, cfg))
-    grad_fn = jax.jit(lambda s: prob.phi_grad_norm(
-        jax.tree.map(lambda x: x.mean(0), s.x)))
+
+    sampler = engine_lib.make_fixed_batch_sampler(
+        kb, local_steps=cfg.local_steps, num_clients=n, seed=seed)
+    build = engine_lib.make_chunk_builder(
+        make_round_step(prob, cfg), sampler)
+    grad_fn = jax.jit(lambda s: prob.phi_grad_norm(mean_over_clients(s.x)))
 
     hist = []
     hit = None
+    final_round = jnp.int32(max_rounds - 1)
     t0 = time.time()
-    for t in range(max_rounds):
-        keys = jax.random.split(jax.random.PRNGKey(seed * 7919 + t),
-                                k_eff * n).reshape(k_eff, n, 2)
-        st = step(st, kb, keys)
-        if (t + 1) % eval_every == 0:
-            g = float(grad_fn(st))
-            hist.append((t + 1, g))
-            if hit is None and g < eps:
-                hit = t + 1
-                break
+    r = 0
+    while r < max_rounds:
+        length = min(eval_every, max_rounds - r)
+        st, _ = build(length)(st, final_round)
+        r += length
+        g = float(grad_fn(st))
+        hist.append((r, g))
+        if g < eps:
+            hit = r
+            break
     final = hist[-1][1] if hist else float("nan")
     return hit, final, time.time() - t0, hist

@@ -15,6 +15,7 @@ import time
 
 from benchmarks import (
     bench_convergence,
+    bench_engine,
     bench_gossip,
     bench_heterogeneity,
     bench_local_steps,
@@ -30,6 +31,7 @@ BENCHES = {
     "topology": bench_topology.run,            # V4: T vs p
     "speedup": bench_speedup.run,              # V5: linear speedup in n
     "gossip": bench_gossip.run,                # round-epilogue lowerings
+    "engine": bench_engine.run,                # host loop vs scanned chunks
     "roofline": roofline.run,                  # deliverable (g)
 }
 

@@ -1,6 +1,9 @@
 """Adversarial-embedding minimax training (the paper's adversarial-training
 application): y is a universal embedding perturbation ascended jointly while
-x descends — run decentralized with K-GT-Minimax.
+x descends — run decentralized with K-GT-Minimax on the chunked engine
+(``repro.engine``): rounds execute as scanned chunks with the heterogeneous
+token data sampled on device and clean/adversarial losses streamed through
+the metrics buffer (a custom ``metrics_fn`` — the engine is metric-agnostic).
 
   PYTHONPATH=src python examples/adversarial_training.py --rounds 40
 """
@@ -9,10 +12,11 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro import engine as engine_lib
 from repro.configs.base import AlgorithmConfig
 from repro.configs.registry import get_model_config, reduced
 from repro.core import adversarial_problem, init_state, make_round_step
-from repro.data import make_data_model, round_batches
+from repro.data import make_data_model
 
 
 def main() -> None:
@@ -21,6 +25,7 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=10)
     args = ap.parse_args()
 
     cfg = reduced(get_model_config(args.arch))
@@ -32,28 +37,42 @@ def main() -> None:
     key = jax.random.PRNGKey(0)
     dm = make_data_model(key, vocab_size=cfg.vocab_size, num_groups=4,
                          num_clients=n, alpha=0.3)
-    batches0 = round_batches(dm, key, local_steps=1, num_clients=n,
-                             per_client_batch=2, seq_len=64, cfg=cfg)
+    # disjoint key streams: the sampler folds the round index into k_train,
+    # so the eval key must NOT come from fold_in(k_train, ·) or the "held
+    # out" batch would collide with some round's training data
+    k_train, k_eval = jax.random.split(key)
+    sampler = engine_lib.make_dro_sampler(
+        dm, k_train, local_steps=K, num_clients=n, per_client_batch=2,
+        seq_len=64, cfg=cfg)
+    batches0, _ = sampler(jnp.int32(0))
     state = init_state(problem, algo, key,
                        init_batch=jax.tree.map(lambda x: x[0], batches0),
                        init_keys=jax.random.split(key, n))
-    step = jax.jit(make_round_step(problem, algo))
 
-    for t in range(args.rounds):
-        kb = jax.random.fold_in(key, t)
-        batches = round_batches(dm, kb, local_steps=K, num_clients=n,
-                                per_client_batch=2, seq_len=64, cfg=cfg)
-        keys = jax.random.split(kb, K * n).reshape(K, n, 2)
-        state = step(state, batches, keys)
-        if t % 10 == 0 or t == args.rounds - 1:
-            eval_b = jax.tree.map(lambda x: x[0, 0], batches)
-            xbar = jax.tree.map(lambda x: x.mean(0), state.x)
-            ybar = state.y.mean(0)
-            clean = problem.value(xbar, jnp.zeros_like(ybar), eval_b, None)
-            robust = problem.value(xbar, ybar, eval_b, None)
-            print(f"round {t:3d}  clean loss {float(clean):.4f}  "
-                  f"adversarial loss {float(robust):.4f}  "
-                  f"|y| {float(jnp.linalg.norm(ybar)):.4f}", flush=True)
+    # held-out eval batch: clean vs adversarial loss of the consensus model
+    eval_b = engine_lib.held_out_eval_batch(
+        dm, k_eval, num_clients=n, per_client_batch=2, seq_len=64, cfg=cfg)
+
+    def metrics_fn(state, batches):
+        xbar = jax.tree.map(lambda x: x.mean(0), state.x)
+        ybar = state.y.mean(0)
+        return {
+            "clean_loss": problem.value(xbar, jnp.zeros_like(ybar), eval_b, None),
+            "adv_loss": problem.value(xbar, ybar, eval_b, None),
+            "y_norm": jnp.linalg.norm(ybar),
+        }
+
+    build = engine_lib.make_chunk_builder(
+        make_round_step(problem, algo), sampler, metrics_fn, log_every=10)
+
+    def show(state, records, prev_round):
+        for r in records:
+            print(f"round {r['round']:3d}  clean loss {r['clean_loss']:.4f}  "
+                  f"adversarial loss {r['adv_loss']:.4f}  "
+                  f"|y| {r['y_norm']:.4f}", flush=True)
+
+    engine_lib.run(state, build, total_rounds=args.rounds,
+                   chunk_rounds=args.chunk, hooks=[show], wall_clock=False)
 
 
 if __name__ == "__main__":

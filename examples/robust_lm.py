@@ -41,6 +41,9 @@ def main() -> None:
         eta_cy=0.15, eta_s=0.5, topology="ring", mixing_impl="dense",
         gossip_dtype="float32", schedule="wsd", warmup=10, seed=0,
         log_every=10, checkpoint_every=100, checkpoint_dir="/tmp/robust_lm_ckpt",
+        # repro.engine chunked execution: one compiled scan per 10 rounds,
+        # checkpoints land on chunk boundaries
+        engine="scan", chunk=10, mesh="host",
         out="/root/repo/results/robust_lm.json")
     result = train_lib.train(ns)
     import json

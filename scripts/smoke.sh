@@ -7,10 +7,13 @@
 #      builds + jit-compiles the K-GT-Minimax train round on a
 #      (clients=2, fsdp=2, model=2) mesh and prefill/decode on a
 #      (data=4, model=2) mesh, exercising repro.dist shardings end-to-end.
-#   3. benchmarks.run gossip — the round-epilogue bench: times the
-#      dense/fused/pallas_packed lowerings (incl. the Pallas kernel in
-#      interpret mode) and counts collectives on a 4-fake-device clients
-#      mesh, so the bench + kernel path can't rot.
+#   3. engine-backed train smokes — a real (tiny) repro.launch.train run on
+#      the scan engine, once on plain host jit and once on a 4-fake-device
+#      decentralized mesh (scanned chunk with donated sharded state +
+#      device-side sampling under GSPMD).
+#   4. benchmarks.run gossip engine — the round-epilogue bench (collective
+#      counts per mixing_impl) and the engine bench (rounds/s: per-round
+#      host dispatch vs scanned chunks), merged into results/benchmarks.json.
 #
 # Usage: scripts/smoke.sh [--archs ARCH ...]     (default: qwen2-0.5b)
 set -euo pipefail
@@ -24,7 +27,18 @@ echo "collection ok"
 echo "== step programs compile on fake CPU mesh =="
 python -m repro.launch.smoke "$@"
 
-echo "== gossip round-epilogue bench (fake-device mesh collectives) =="
-python -m benchmarks.run gossip
+echo "== engine-backed train smoke (host) =="
+python -m repro.launch.train --arch qwen2-0.5b --reduced --engine scan \
+    --rounds 4 --chunk 2 --clients 2 --local-steps 2 --batch 2 \
+    --seq-len 32 --groups 4 --log-every 2
+
+echo "== engine-backed train smoke (decentralized mesh, fake devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+python -m repro.launch.train --arch qwen2-0.5b --reduced --engine scan \
+    --mesh decentralized --rounds 4 --chunk 2 --clients 4 --local-steps 2 \
+    --batch 2 --seq-len 32 --groups 4 --log-every 2
+
+echo "== gossip + engine benches (merged into results/benchmarks.json) =="
+python -m benchmarks.run gossip engine
 
 echo "smoke ok"

@@ -269,14 +269,23 @@ def mean_over_clients(tree):
     return jax.tree.map(lambda x: x.mean(0), tree)
 
 
+def correction_mean_norm(tree) -> jnp.ndarray:
+    """‖c̄‖ = ‖(1/n) Σ_i c_i‖ over all leaves — Lemma 8 says exactly 0 for
+    the tracking variants; drift here means the correction update is wrong."""
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.mean(0).astype(jnp.float32)))
+        for l in jax.tree.leaves(tree)))
+
+
 def diagnostics(problem: MinimaxProblem, state: KGTState):
     """Exact ‖∇Φ(x̄)‖ (quadratic problems) + consensus errors."""
     out = {
         "consensus_x": mixing_lib.consensus_error(state.x),
         "consensus_y": mixing_lib.consensus_error(state.y),
-        "correction_mean_norm": jnp.sqrt(sum(
-            jnp.sum(jnp.square(l.mean(0))) for l in jax.tree.leaves(state.cx)
-        )),
+        # the x-correction norm keeps its historical key; cy is the mirrored
+        # line-8 state and deserves the same Lemma-8 watchdog
+        "correction_mean_norm": correction_mean_norm(state.cx),
+        "correction_mean_norm_y": correction_mean_norm(state.cy),
     }
     if problem.phi_grad is not None:
         xbar = mean_over_clients(state.x)

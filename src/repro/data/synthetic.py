@@ -8,6 +8,13 @@ the quantity the paper's heterogeneity-robustness claim is about.
 
 Group labels (the domain of each sequence) feed the DRO objective's
 per-group losses.
+
+Sampling is a *pure function of (key, client)* built entirely from jax
+primitives, so batches can be drawn inside ``jit`` — the execution engine
+(``repro.engine``) calls ``round_batches`` from within a ``lax.scan`` body
+with a traced round index, generating each round's data on device instead
+of transferring it from host.  ``DataModel`` is registered as a pytree so
+it crosses jit boundaries as data (arrays) + static metadata.
 """
 from __future__ import annotations
 
@@ -29,6 +36,13 @@ class DataModel:
     num_groups: int
 
 
+jax.tree_util.register_dataclass(
+    DataModel,
+    data_fields=["domain_logits", "domain_shift", "mixtures"],
+    meta_fields=["vocab_size", "num_groups"],
+)
+
+
 def make_data_model(
     key,
     *,
@@ -38,14 +52,17 @@ def make_data_model(
     alpha: float = 0.3,
     sharpness: float = 2.0,
 ) -> DataModel:
-    k1, k2, k3 = jax.random.split(key, 3)
+    # k3 (vocab-tile noise) and k4 (Dirichlet mixtures) used to be the same
+    # key — fixed in PR 3, which shifts sampled mixtures for a given seed
+    # (regression-pinned in tests/test_data.py).
+    k1, k2, k3, k4 = jax.random.split(key, 4)
     logits = sharpness * jax.random.normal(k1, (num_groups, min(vocab_size, 4096)))
     if vocab_size > 4096:  # tile to the full vocab, cheap + deterministic
         reps = -(-vocab_size // 4096)
         logits = jnp.tile(logits, (1, reps))[:, :vocab_size]
         logits = logits + 0.01 * jax.random.normal(k3, (num_groups, 1))
     shift = jax.random.randint(k2, (num_groups,), 1, max(2, vocab_size // 7))
-    mix = jax.random.dirichlet(k3, jnp.full((num_groups,), alpha), (num_clients,))
+    mix = jax.random.dirichlet(k4, jnp.full((num_groups,), alpha), (num_clients,))
     return DataModel(
         domain_logits=logits,
         domain_shift=shift,
@@ -63,7 +80,10 @@ def sample_client_batch(dm: DataModel, key, client: int, batch: int, seq_len: in
     sequence's domain id.  Bigram structure: t_{s+1} depends on t_s via a
     domain-specific shift, so models can actually learn per-domain structure.
     """
-    kg, kt = jax.random.split(key)
+    # kg: domain draw; kt: token draws; kb: bigram/unigram mask.  kg used to
+    # double as kb — fixed in PR 3 (see tests/test_data.py for the pinned
+    # post-fix key-splitting scheme).
+    kg, kt, kb = jax.random.split(key, 3)
     g = jax.random.categorical(kg, jnp.log(dm.mixtures[client] + 1e-9), shape=(batch,))
     if num_codebooks:
         toks = jax.random.categorical(
@@ -78,7 +98,7 @@ def sample_client_batch(dm: DataModel, key, client: int, batch: int, seq_len: in
         shift = dm.domain_shift[g][:, None]
         # blend unigram draws with the bigram-shift of the previous token
         prev = jnp.roll(first, 1, axis=1).at[:, 0].set(first[:, 0])
-        use_bigram = jax.random.bernoulli(kg, 0.5, first.shape)
+        use_bigram = jax.random.bernoulli(kb, 0.5, first.shape)
         seq = jnp.where(use_bigram, (prev + shift) % dm.vocab_size, first)
         tokens, labels = seq[:, :-1], seq[:, 1:]
     groups = jnp.broadcast_to(g[:, None], (batch, seq_len)).astype(jnp.int32)

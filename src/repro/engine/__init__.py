@@ -1,0 +1,24 @@
+"""Chunked multi-round execution engine (see ``docs/architecture.md``,
+"The execution engine").
+
+``engine`` — scan-over-rounds chunk programs, the chunk driver, hooks.
+``sampler`` — device-side per-round batch samplers.
+``diagnostics`` — metric functions for the streaming metrics buffer.
+"""
+from repro.engine.engine import (  # noqa: F401
+    checkpoint_hook,
+    chunk_program,
+    make_chunk_builder,
+    records_from_buffer,
+    row_to_record,
+    run,
+)
+from repro.engine.diagnostics import (  # noqa: F401
+    dro_metrics_fn,
+    quadratic_metrics_fn,
+)
+from repro.engine.sampler import (  # noqa: F401
+    held_out_eval_batch,
+    make_dro_sampler,
+    make_fixed_batch_sampler,
+)

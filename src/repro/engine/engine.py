@@ -1,0 +1,221 @@
+"""Chunked scan-over-rounds execution engine.
+
+The host training loop pays per-round costs that have nothing to do with
+Algorithm 1: host-side batch sampling, host→device transfer, one jit
+dispatch per round, and a blocking metrics read.  For the
+thousands-of-rounds × K-local-steps trajectories the paper's experiments
+run, that overhead dominates wall-clock on fast hardware.
+
+This engine compiles **R-round chunks as a single XLA program**:
+
+  * ``lax.scan`` over ``round_step`` — one dispatch per R rounds;
+  * a device-side *sampler* ``(round_idx) -> (batches, keys)`` called inside
+    the scan body, so each round's data is generated on device
+    (``repro.engine.sampler``; no per-round host→device transfer);
+  * *streaming diagnostics* — a fixed-size on-device metrics buffer
+    ``(mask, rounds, rows)`` of length R, filled every ``log_every`` rounds
+    by ``metrics_fn`` inside the scan (a ``lax.cond`` skips the compute on
+    non-logged rounds) and read back **once per chunk**;
+  * chunk-boundary *hooks* (checkpointing, …).  ``state.round`` is the
+    single source of truth: the sampler, the lr schedule (``lr_scale``
+    inside ``round_step``), and the metrics gating are all functions of it,
+    so a restored checkpoint resumes the identical trajectory.
+
+Layering: this module is algorithm- and problem-agnostic — it only needs a
+``round_step(state, batches, keys) -> state`` with an integer
+``state.round`` field, a sampler, and (optionally) a metrics function
+returning a flat ``{name: array}`` dict.  ``repro.launch.train`` drives the
+DRO-LM runs through it, ``repro.launch.steps.build_train_chunk`` compiles
+the same chunk program with donated sharded state over the decentralized
+mesh, and ``benchmarks/``/``examples/`` consume it for the paper-toy
+trajectories.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Sampler = Callable[[jnp.ndarray], Tuple[Any, jnp.ndarray]]
+MetricsFn = Callable[[Any, Any], Dict[str, jnp.ndarray]]
+Hook = Callable[[Any, List[dict], int], None]  # (state, records, prev_round)
+
+
+def chunk_program(
+    round_step: Callable[[Any, Any, Any], Any],
+    sampler: Sampler,
+    metrics_fn: Optional[MetricsFn] = None,
+    *,
+    log_every: int = 1,
+    length: int,
+):
+    """Builds ``chunk_step(state, final_round) -> (state, buffer)``.
+
+    ``buffer`` is ``None`` when ``metrics_fn`` is None, else the fixed-size
+    on-device triple ``(mask (R,), rounds (R,), rows {name: (R, …)})``.
+    A row is filled when the round index hits the ``log_every`` grid or
+    equals ``final_round`` (so the last round of a run always logs) —
+    matching the host driver's ``t % log_every == 0 or t == rounds-1``.
+    """
+    log_every = max(int(log_every), 1)
+
+    def chunk_step(state, final_round):
+        def body(st, _):
+            batches, keys = sampler(st.round)
+            new_st = round_step(st, batches, keys)
+            if metrics_fn is None:
+                return new_st, None
+            do_log = jnp.logical_or(st.round % log_every == 0,
+                                    st.round == final_round)
+            shapes = jax.eval_shape(metrics_fn, new_st, batches)
+            zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+            row = jax.lax.cond(
+                do_log, lambda: metrics_fn(new_st, batches), lambda: zeros)
+            return new_st, (do_log, st.round, row)
+
+        state, buf = jax.lax.scan(body, state, None, length=length)
+        return state, buf
+
+    return chunk_step
+
+
+def make_chunk_builder(
+    round_step: Callable[[Any, Any, Any], Any],
+    sampler: Sampler,
+    metrics_fn: Optional[MetricsFn] = None,
+    *,
+    log_every: int = 1,
+    donate: bool = True,
+    jit_fn=None,
+):
+    """Returns ``build(length) -> jitted chunk_step``, caching per length.
+
+    A run needs at most two lengths (full chunks + one remainder), so the
+    cache stays tiny.  ``jit_fn(fn)`` overrides how the program is staged —
+    ``build_train_chunk`` passes a mesh-aware jit with sharded/donated
+    state; the default is a plain ``jax.jit`` with the state donated.
+    """
+    cache: Dict[int, Any] = {}
+
+    def build(length: int):
+        if length not in cache:
+            fn = chunk_program(round_step, sampler, metrics_fn,
+                               log_every=log_every, length=length)
+            if jit_fn is not None:
+                cache[length] = jit_fn(fn)
+            else:
+                cache[length] = jax.jit(
+                    fn, donate_argnums=(0,) if donate else ())
+        return cache[length]
+
+    return build
+
+
+def row_to_record(row: Dict[str, Any], round_idx: int) -> dict:
+    """One metrics row (host-side arrays) -> a plain-python history record:
+    scalars become floats, vectors (e.g. per-group losses) become lists.
+    Shared by the chunk read-back below and the per-round host loop so both
+    execution models emit byte-identical record structures."""
+    rec: dict = {"round": int(round_idx)}
+    for name, v in row.items():
+        v = np.asarray(v)
+        rec[name] = float(v) if v.ndim == 0 else v.tolist()
+    return rec
+
+
+def records_from_buffer(buf) -> List[dict]:
+    """Device metrics buffer -> list of plain-python history records.
+
+    One transfer for the whole chunk; rows where the mask is unset (rounds
+    that were not on the log grid) are dropped.
+    """
+    if buf is None:
+        return []
+    mask, rounds, rows = jax.device_get(buf)
+    records = []
+    for i in range(mask.shape[0]):
+        if not bool(mask[i]):
+            continue
+        records.append(row_to_record(
+            {name: col[i] for name, col in rows.items()}, rounds[i]))
+    return records
+
+
+def run(
+    state,
+    build_chunk: Callable[[int], Any],
+    *,
+    total_rounds: int,
+    chunk_rounds: int,
+    hooks: Sequence[Hook] = (),
+    stop_fn: Optional[Callable[[List[dict]], bool]] = None,
+    wall_clock: bool = True,
+    boundary_every: Optional[int] = None,
+):
+    """Drives chunks from ``state.round`` up to ``total_rounds``.
+
+    Host work per chunk: one dispatch, one metrics read-back, hooks.  The
+    resume point is read from ``state.round`` (a restored checkpoint picks
+    up exactly where it left off).  Hooks are called at every chunk boundary
+    as ``hook(state, records, prev_round)`` where ``prev_round`` is the
+    round count before the chunk ran.  ``boundary_every=N`` splits chunks so
+    a boundary lands on every multiple of N — pass the checkpoint cadence
+    so ``checkpoint_hook`` fires at the exact requested rounds regardless
+    of chunk alignment.  ``stop_fn(records) -> bool`` enables early exit at
+    chunk boundaries (benchmarks' rounds-to-ε loops).
+
+    Returns ``(state, history)`` with history records as produced by
+    ``records_from_buffer`` (+ a ``wall_s`` stamp unless disabled).
+    """
+    chunk_rounds = max(int(chunk_rounds), 1)
+    history: List[dict] = []
+    start = int(state.round)
+    final_round = jnp.int32(total_rounds - 1)
+    t0 = time.time()
+    r = start
+    while r < total_rounds:
+        length = min(chunk_rounds, total_rounds - r)
+        if boundary_every:
+            next_boundary = (r // boundary_every + 1) * boundary_every
+            length = min(length, next_boundary - r)
+        state, buf = build_chunk(length)(state, final_round)
+        records = records_from_buffer(buf)
+        if wall_clock:
+            wall = round(time.time() - t0, 1)
+            for rec in records:
+                rec["wall_s"] = wall
+        history.extend(records)
+        for hook in hooks:
+            hook(state, records, r)
+        r += length
+        if stop_fn is not None and stop_fn(records):
+            break
+    return state, history
+
+
+def checkpoint_hook(directory: str, every: int, metadata: Optional[dict] = None,
+                    verbose: bool = False) -> Hook:
+    """Chunk-boundary checkpointing: saves when the boundary crosses a
+    multiple of ``every`` rounds (with the engine, checkpoints land on chunk
+    boundaries — ``state.round`` in the filename/metadata keeps the resume
+    point exact regardless of alignment).  A boundary can cross several
+    multiples at once; pass ``boundary_every=every`` to ``run`` to split
+    chunks at the exact multiples (``launch/train`` does)."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    def hook(state, records, prev_round):
+        r = int(state.round)
+        if not every or r // every <= prev_round // every:
+            return
+        path = os.path.join(directory, f"round_{r:06d}.npz")
+        meta = dict(metadata or {})
+        meta["round"] = r
+        ckpt_lib.save(path, state, metadata=meta)
+        if verbose:
+            print(f"[engine] checkpoint -> {path}", flush=True)
+
+    return hook

@@ -1,0 +1,92 @@
+"""Device-side per-round batch samplers for the chunked engine.
+
+A *sampler* is a pure, jit-traceable function ``(round_idx) -> (batches,
+keys)`` producing exactly what ``round_step`` eats: batches stacked
+``(K, n, B, S…)`` and per-(local step, client) PRNG keys ``(K, n, 2)``.
+Called inside the engine's ``lax.scan`` body with the traced
+``state.round``, so data generation happens on device and the round loop
+needs zero host→device transfers.
+
+The DRO sampler reproduces the host driver's historical key schedule
+(``kb = fold_in(round_key, t)``; batch keys from ``kb``, oracle keys from
+``fold_in(kb, 999)``) bit-for-bit, which is what makes the
+engine-vs-host-loop trajectory equality in ``tests/test_engine.py`` exact.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data import synthetic as data_lib
+
+
+def make_dro_sampler(
+    dm: data_lib.DataModel,
+    round_key,
+    *,
+    local_steps: int,
+    num_clients: int,
+    per_client_batch: int,
+    seq_len: int,
+    cfg: Optional[ModelConfig] = None,
+):
+    """Sampler over a heterogeneous synthetic ``DataModel``.
+
+    ``round_key`` seeds the whole data stream; round ``t`` draws from
+    ``fold_in(round_key, t)`` so any round's batch is reproducible in
+    isolation (checkpoint restore at round r resamples the same data).
+    """
+
+    def sample(round_idx):
+        kb = jax.random.fold_in(round_key, round_idx)
+        batches = data_lib.round_batches(
+            dm, kb, local_steps=local_steps, num_clients=num_clients,
+            per_client_batch=per_client_batch, seq_len=seq_len, cfg=cfg)
+        keys = jax.random.split(
+            jax.random.fold_in(kb, 999), local_steps * num_clients
+        ).reshape(local_steps, num_clients, 2)
+        return batches, keys
+
+    return sample
+
+
+def make_fixed_batch_sampler(batches, *, local_steps: int, num_clients: int,
+                             seed: int = 0):
+    """Sampler over a fixed K-stacked batch (the synthetic quadratic
+    benchmarks: the 'data' is the per-client problem slice, stochasticity
+    enters through the oracle keys).
+
+    Key schedule matches ``benchmarks.common`` historically:
+    ``PRNGKey(seed * 7919 + t)`` split into (K, n, 2).
+    """
+
+    def sample(round_idx):
+        keys = jax.random.split(
+            jax.random.PRNGKey(seed * 7919 + round_idx),
+            local_steps * num_clients,
+        ).reshape(local_steps, num_clients, 2)
+        return batches, keys
+
+    return sample
+
+
+def held_out_eval_batch(
+    dm: data_lib.DataModel,
+    key,
+    *,
+    num_clients: int,
+    per_client_batch: int,
+    seq_len: int,
+    cfg: Optional[ModelConfig] = None,
+):
+    """One fixed client-balanced eval batch, sampled once from the
+    ``DataModel`` (never from the training stream): one ``per_client_batch``
+    draw per client distribution, flattened to ``(n·B, S…)``."""
+    rb = data_lib.round_batches(
+        dm, key, local_steps=1, num_clients=num_clients,
+        per_client_batch=per_client_batch, seq_len=seq_len, cfg=cfg)
+    return jax.tree.map(
+        lambda x: x.reshape((x.shape[1] * x.shape[2],) + x.shape[3:]), rb)

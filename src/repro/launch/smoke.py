@@ -78,6 +78,48 @@ def smoke_arch(arch: str) -> bool:
         print(f"[smoke] {arch}: packed train FAILED: {type(e).__name__}: {e}",
               flush=True)
 
+    # the scanned engine chunk (repro.engine execution model): R rounds as
+    # one program with device-side sampling + metrics buffer, donated
+    # sharded state — the hot path of launch/train --engine scan on a mesh
+    t0 = time.time()
+    try:
+        import jax.numpy as jnp
+
+        from repro import engine as engine_lib
+        from repro.configs.base import MinimaxConfig
+        from repro.core import objectives
+        from repro.data import synthetic as data_lib
+
+        key = jax.random.PRNGKey(0)
+        dm = data_lib.make_data_model(
+            key, vocab_size=cfg.vocab_size, num_groups=4,
+            num_clients=algo.num_clients)
+        sampler = engine_lib.make_dro_sampler(
+            dm, key, local_steps=algo.local_steps,
+            num_clients=algo.num_clients,
+            per_client_batch=TRAIN_SHAPE.global_batch // algo.num_clients,
+            seq_len=TRAIN_SHAPE.seq_len, cfg=cfg)
+        problem = objectives.dro_problem(cfg, num_groups=4, mu=1.0)
+        eval_b = engine_lib.held_out_eval_batch(
+            dm, key, num_clients=algo.num_clients,
+            per_client_batch=TRAIN_SHAPE.global_batch // algo.num_clients,
+            seq_len=TRAIN_SHAPE.seq_len, cfg=cfg)
+        metrics_fn = engine_lib.dro_metrics_fn(
+            problem, cfg, num_groups=4, eval_batch=eval_b)
+        with compat.use_mesh(mesh):
+            build_chunk, state_sds, _ = steps_lib.build_train_chunk(
+                cfg, TRAIN_SHAPE, mesh, mcfg, algo=algo,
+                minimax=MinimaxConfig(num_groups=4),
+                sampler=sampler, metrics_fn=metrics_fn, log_every=2)
+            build_chunk(4).lower(
+                state_sds, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+        print(f"[smoke] {arch}: engine chunk (scan x4 rounds) compiled "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    except Exception as e:
+        ok = False
+        print(f"[smoke] {arch}: engine chunk FAILED: {type(e).__name__}: {e}",
+              flush=True)
+
     t0 = time.time()
     smesh = compat.make_mesh((4, 2), ("data", "model"))
     try:

@@ -35,7 +35,7 @@ def _sds(shape, dtype):
 # Training round
 # ---------------------------------------------------------------------------
 
-def build_train_round(
+def _train_parts(
     model_cfg: ModelConfig,
     shape: InputShape,
     mesh: Mesh,
@@ -44,12 +44,9 @@ def build_train_round(
     minimax: Optional[MinimaxConfig] = None,
     lr_scale=None,
 ):
-    """Returns (jitted_round_step, state_sds, batch_sds, key_sds, shardings).
-
-    The round state is x=(n, model params), y=(n, G); batches are stacked
-    (K, n, B_client, S...).  Residual activations are constrained to
-    (fsdp=batch, model=seq) inside each client.
-    """
+    """Shared setup for the per-round and chunked train programs: the
+    constrained round_step callable, abstract state/batch/key specs, and
+    their shardings."""
     algo = algo or AlgorithmConfig(num_clients=mcfg.num_clients)
     algo = dataclasses.replace(algo, num_clients=mcfg.num_clients)
     if algo.mixing_impl == "pallas_packed" and algo.gossip_backend == "auto":
@@ -132,13 +129,93 @@ def build_train_round(
         with dist_ctx.residual_constraint(constraint, **slots):
             return round_fn(state, batches, keys)
 
+    return (round_step, state_sds, batch_sds, key_sds,
+            (state_shard, batch_shard, key_shard))
+
+
+def build_train_round(
+    model_cfg: ModelConfig,
+    shape: InputShape,
+    mesh: Mesh,
+    mcfg: MeshConfig,
+    algo: Optional[AlgorithmConfig] = None,
+    minimax: Optional[MinimaxConfig] = None,
+    lr_scale=None,
+):
+    """Returns (jitted_round_step, state_sds, batch_sds, key_sds, shardings).
+
+    The round state is x=(n, model params), y=(n, G); batches are stacked
+    (K, n, B_client, S...).  Residual activations are constrained to
+    (fsdp=batch, model=seq) inside each client.
+    """
+    round_step, state_sds, batch_sds, key_sds, shardings = _train_parts(
+        model_cfg, shape, mesh, mcfg, algo=algo, minimax=minimax,
+        lr_scale=lr_scale)
+    state_shard, batch_shard, key_shard = shardings
     jitted = jax.jit(
         round_step,
         in_shardings=(state_shard, batch_shard, key_shard),
         out_shardings=state_shard,
         donate_argnums=(0,),
     )
-    return jitted, state_sds, batch_sds, key_sds, (state_shard, batch_shard, key_shard)
+    return jitted, state_sds, batch_sds, key_sds, shardings
+
+
+def build_train_chunk(
+    model_cfg: ModelConfig,
+    shape: InputShape,
+    mesh: Mesh,
+    mcfg: MeshConfig,
+    *,
+    algo: Optional[AlgorithmConfig] = None,
+    minimax: Optional[MinimaxConfig] = None,
+    lr_scale=None,
+    sampler,
+    metrics_fn=None,
+    log_every: int = 1,
+):
+    """The scanned multi-round chunk over the decentralized mesh
+    (``repro.engine`` execution model under GSPMD).
+
+    Returns ``(build_chunk, state_sds, state_shard)`` where
+    ``build_chunk(length)`` is a jitted ``chunk_step(state, final_round)``
+    with the sharded state **donated** across chunk calls.  The sampler runs
+    inside the scan body; its batches/keys are pinned to the same
+    ``(None, clients, fsdp, model)`` layout the per-round program uses, so
+    each client's local steps stay confined to its sub-mesh and only gossip
+    crosses the clients axis — now once per compiled chunk of R rounds'
+    worth of program, not once per dispatch.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro import engine as engine_lib
+
+    round_step, state_sds, _, _, shardings = _train_parts(
+        model_cfg, shape, mesh, mcfg, algo=algo, minimax=minimax,
+        lr_scale=lr_scale)
+    state_shard, batch_shard, key_shard = shardings
+
+    def sharded_sampler(round_idx):
+        batches, keys = sampler(round_idx)
+        batches = jax.tree.map(jax.lax.with_sharding_constraint,
+                               batches, batch_shard)
+        keys = jax.lax.with_sharding_constraint(keys, key_shard)
+        return batches, keys
+
+    def jit_fn(chunk_fn):
+        # metrics buffer out_sharding stays unspecified (small, replicated)
+        return jax.jit(
+            chunk_fn,
+            in_shardings=(state_shard, NamedSharding(mesh, P())),
+            out_shardings=(state_shard, None),
+            donate_argnums=(0,),
+        )
+
+    build_chunk = engine_lib.make_chunk_builder(
+        round_step, sharded_sampler, metrics_fn, log_every=log_every,
+        jit_fn=jit_fn)
+    return build_chunk, state_sds, state_shard
 
 
 # ---------------------------------------------------------------------------

@@ -2,9 +2,17 @@
 
 Runs real federated minimax training (DRO over the selected architecture)
 with the full substrate: heterogeneous synthetic data, round batching,
-schedules, checkpointing, and per-round diagnostics.  On this CPU container
+schedules, checkpointing, and streaming diagnostics.  On this CPU container
 it trains reduced configs / paper-toy end-to-end; on a TPU cluster the same
-driver lowers onto the decentralized mesh via ``--mesh production``.
+driver lowers onto the decentralized mesh via ``--mesh decentralized``.
+
+Execution is delegated to ``repro.engine`` (``--engine scan``, the
+default): R-round chunks compile as a single ``lax.scan`` program with
+device-side data sampling and an on-device metrics buffer, so the host
+pays one dispatch + one metrics read per chunk instead of per round.
+``--engine host`` keeps the historical per-round loop (same sampler, same
+metrics — the trajectories are bit-identical, see tests/test_engine.py)
+for A/B and debugging.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch paper-toy --rounds 50
@@ -20,16 +28,59 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro import engine as engine_lib
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.configs import registry
-from repro.configs.base import AlgorithmConfig, MinimaxConfig, TrainConfig
+from repro.configs.base import AlgorithmConfig, MinimaxConfig
 from repro.core import kgt_minimax as kgt
 from repro.core import mixing as mixing_lib
 from repro.core import objectives, topology
 from repro.data import synthetic as data_lib
 from repro.optim import schedules
+
+
+def _print_record(rec: dict) -> None:
+    eval_part = (f"  ℓ_eval={rec['eval_loss']:.4f}"
+                 if "eval_loss" in rec else "")
+    print(f"[train] round {rec['round']:4d}  f(x̄,ȳ)={rec['f_bar']:.4f}  "
+          f"ℓ̄={rec['mean_loss']:.4f}{eval_part}  "
+          f"Ξx={rec['consensus_x']:.3e}  |ȳ|={rec['y_bar_norm']:.3f}  "
+          f"({rec.get('wall_s', 0)}s)", flush=True)
+
+
+def _build_mesh_programs(args, cfg, algo, minimax, sched, sampler, metrics_fn,
+                         engine_mode):
+    """The repro.dist-sharded program over the local device mesh: the chunk
+    builder (scan engine) or the per-round step (host engine) — only the
+    one the selected engine runs."""
+    import math
+
+    from repro.configs.base import InputShape, MeshConfig
+    from repro.dist import compat
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import steps as steps_lib
+
+    # clients axis must divide the state's leading dim (= num_clients):
+    # use the largest device count that does.
+    n_dev = math.gcd(len(jax.devices()), algo.num_clients)
+    mesh = mesh_lib.local_mesh(n_dev)
+    mcfg = MeshConfig(num_clients=algo.num_clients, fsdp=1, model=1,
+                      param_mode="replicated", remat=False)
+    shape = InputShape(name="train_cli", seq_len=args.seq_len,
+                       global_batch=args.batch * algo.num_clients,
+                       kind="train")
+    with compat.use_mesh(mesh):
+        if engine_mode == "scan":
+            build_chunk, _, state_shard = steps_lib.build_train_chunk(
+                cfg, shape, mesh, mcfg, algo=algo, minimax=minimax,
+                lr_scale=sched, sampler=sampler, metrics_fn=metrics_fn,
+                log_every=args.log_every)
+            return None, build_chunk, state_shard
+        step, _, _, _, (state_shard, _, _) = steps_lib.build_train_round(
+            cfg, shape, mesh, mcfg, algo=algo, minimax=minimax,
+            lr_scale=sched)
+    return step, None, state_shard
 
 
 def train(args) -> dict:
@@ -51,6 +102,10 @@ def train(args) -> dict:
         gossip_backend=getattr(args, "gossip_backend", "auto"),
     )
     minimax = MinimaxConfig(num_groups=args.groups, mu=args.mu)
+    engine_mode = getattr(args, "engine", "scan")
+    chunk_rounds = max(1, min(int(getattr(args, "chunk", 16)),
+                              max(args.rounds, 1)))
+    mesh_mode = getattr(args, "mesh", "host")
 
     key = jax.random.PRNGKey(args.seed)
     kd, ki, kt = jax.random.split(key, 3)
@@ -71,77 +126,92 @@ def train(args) -> dict:
                            init_keys=jax.random.split(ki, algo.num_clients))
 
     sched = schedules.get_schedule(args.schedule, args.rounds, args.warmup)
-    if getattr(args, "mesh", "host") == "decentralized":
-        # Sharded path: the same jit program the dry-run lowers for a pod,
+
+    # Device-side data path: the per-round sampler (a pure function of the
+    # round index, callable inside the scanned chunk) and one fixed held-out
+    # eval batch — logged train metrics use the round's own data, eval
+    # metrics use data the optimizer never sees.
+    sampler = engine_lib.make_dro_sampler(
+        dm, kt, local_steps=algo.local_steps, num_clients=algo.num_clients,
+        per_client_batch=args.batch, seq_len=args.seq_len, cfg=cfg)
+    eval_b = engine_lib.held_out_eval_batch(
+        dm, jax.random.fold_in(kd, 2), num_clients=algo.num_clients,
+        per_client_batch=args.batch, seq_len=args.seq_len, cfg=cfg)
+    metrics_fn = engine_lib.dro_metrics_fn(
+        problem, cfg, num_groups=args.groups, eval_batch=eval_b)
+
+    if mesh_mode == "decentralized":
+        # Sharded path: the same jit programs the dry-run lowers for a pod,
         # here over whatever local devices exist (clients axis = n_devices).
         # repro.dist places the leading clients dim of the K-GT-Minimax
         # state on the "clients" mesh axis; only gossip crosses clients.
-        from repro.configs.base import InputShape, MeshConfig
-        from repro.dist import compat
-        from repro.launch import mesh as mesh_lib
-        from repro.launch import steps as steps_lib
-
-        # clients axis must divide the state's leading dim (= num_clients):
-        # use the largest device count that does.
-        import math
-        n_dev = math.gcd(len(jax.devices()), algo.num_clients)
-        mesh = mesh_lib.local_mesh(n_dev)
-        mcfg = MeshConfig(num_clients=algo.num_clients, fsdp=1, model=1,
-                          param_mode="replicated", remat=False)
-        shape = InputShape(name="train_cli", seq_len=args.seq_len,
-                           global_batch=args.batch * algo.num_clients,
-                           kind="train")
-        with compat.use_mesh(mesh):
-            step, _, _, _, (state_shard, _, _) = steps_lib.build_train_round(
-                cfg, shape, mesh, mcfg, algo=algo, minimax=minimax,
-                lr_scale=sched)
+        step, build_chunk, state_shard = _build_mesh_programs(
+            args, cfg, algo, minimax, sched, sampler, metrics_fn, engine_mode)
         state = jax.device_put(state, state_shard)
     else:
-        step = jax.jit(kgt.make_round_step(problem, algo, lr_scale=sched))
+        round_step = kgt.make_round_step(problem, algo, lr_scale=sched)
+        step = jax.jit(round_step)
+        build_chunk = engine_lib.make_chunk_builder(
+            round_step, sampler, metrics_fn, log_every=args.log_every)
     w = topology.mixing_matrix(algo.topology, algo.num_clients)
     print(f"[train] {cfg.name}: {sum(x.size for x in jax.tree.leaves(state.x))/1e6:.2f}M "
           f"client-stacked params, n={algo.num_clients}, K={algo.local_steps}, "
-          f"p={topology.spectral_gap(w):.3f}, algo={algo.algorithm}", flush=True)
+          f"p={topology.spectral_gap(w):.3f}, algo={algo.algorithm}, "
+          f"engine={engine_mode}"
+          + (f" (chunk={chunk_rounds})" if engine_mode == "scan" else ""),
+          flush=True)
 
+    if engine_mode == "scan":
+        hooks = []
+        if args.checkpoint_every:
+            hooks.append(engine_lib.checkpoint_hook(
+                args.checkpoint_dir, args.checkpoint_every,
+                metadata={"arch": cfg.name}, verbose=True))
+
+        def print_hook(state, records, prev_round):
+            for rec in records:
+                _print_record(rec)
+
+        state, history = engine_lib.run(
+            state, build_chunk, total_rounds=args.rounds,
+            chunk_rounds=chunk_rounds, hooks=[print_hook] + hooks,
+            # chunk boundaries land on every checkpoint multiple, so the
+            # requested cadence is honored exactly (matches --engine host)
+            boundary_every=args.checkpoint_every or None)
+    else:
+        history = _host_loop(args, state, step, sampler, metrics_fn, cfg)
+
+    return {
+        "history": history,
+        "final_consensus": history[-1]["consensus_x"] if history else None,
+    }
+
+
+def _host_loop(args, state, step, sampler, metrics_fn, cfg):
+    """The historical per-round loop (``--engine host``): per-round jit
+    dispatch with eagerly sampled batches.  Kept as the A/B reference — it
+    runs the same sampler and metrics as the scan engine, so trajectories
+    and logged diagnostics are identical, just slower."""
+    sample = jax.jit(sampler)
+    metrics = jax.jit(metrics_fn)
     history = []
     t0 = time.time()
     for t in range(args.rounds):
-        kb = jax.random.fold_in(kt, t)
-        batches = data_lib.round_batches(
-            dm, kb, local_steps=algo.local_steps, num_clients=algo.num_clients,
-            per_client_batch=args.batch, seq_len=args.seq_len, cfg=cfg)
-        keys = jax.random.split(
-            jax.random.fold_in(kb, 999), algo.local_steps * algo.num_clients
-        ).reshape(algo.local_steps, algo.num_clients, 2)
+        batches, keys = sample(jnp.int32(t))
         state = step(state, batches, keys)
 
         if t % args.log_every == 0 or t == args.rounds - 1:
-            from repro.models import per_group_loss as _pgl
-
-            xbar = kgt.mean_over_clients(state.x)
-            eval_b = jax.tree.map(lambda x: x[0, 0], batches)  # (k=0, client 0)
-            f_val = float(problem.value(xbar, state.y.mean(0), eval_b, None))
-            losses, _ = _pgl(xbar, eval_b, cfg, num_groups=args.groups)
-            rec = {
-                "round": t,
-                "f_bar": f_val,
-                "mean_loss": float(losses.mean()),
-                "consensus_x": float(mixing_lib.consensus_error(state.x)),
-                "y_bar_norm": float(jnp.linalg.norm(state.y.mean(0))),
-                "wall_s": round(time.time() - t0, 1),
-            }
+            rec = engine_lib.row_to_record(
+                jax.device_get(metrics(state, batches)), t)
+            rec["wall_s"] = round(time.time() - t0, 1)
             history.append(rec)
-            print(f"[train] round {t:4d}  f(x̄,ȳ)={rec['f_bar']:.4f}  "
-                  f"ℓ̄={rec['mean_loss']:.4f}  "
-                  f"Ξx={rec['consensus_x']:.3e}  |ȳ|={rec['y_bar_norm']:.3f}  "
-                  f"({rec['wall_s']}s)", flush=True)
+            _print_record(rec)
 
         if args.checkpoint_every and (t + 1) % args.checkpoint_every == 0:
             path = os.path.join(args.checkpoint_dir, f"round_{t+1:06d}.npz")
             ckpt_lib.save(path, state, metadata={"round": t + 1, "arch": cfg.name})
             print(f"[train] checkpoint -> {path}", flush=True)
-
-    return {"history": history, "final_consensus": history[-1]["consensus_x"]}
+    return history
 
 
 def main() -> None:
@@ -162,6 +232,12 @@ def main() -> None:
     ap.add_argument("--eta-cx", type=float, default=0.05)
     ap.add_argument("--eta-cy", type=float, default=0.5)
     ap.add_argument("--eta-s", type=float, default=0.7)
+    ap.add_argument("--engine", default="scan", choices=["scan", "host"],
+                    help="scan: repro.engine chunked lax.scan over rounds "
+                         "with on-device sampling/metrics; host: per-round "
+                         "dispatch (A/B fallback, bit-identical trajectory)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="rounds per compiled scan chunk (--engine scan)")
     ap.add_argument("--mesh", default="host",
                     choices=["host", "decentralized"],
                     help="host: plain single-device jit; decentralized: the "

@@ -56,6 +56,9 @@ def test_converges_on_heterogeneous_ncsc():
     d = diagnostics(prob, st)
     assert float(d["phi_grad_norm"]) < 0.15
     assert float(d["consensus_x"]) < 1e-3
+    # Lemma 8 watchdogs for BOTH corrections (cy reported since PR 3)
+    assert float(d["correction_mean_norm"]) < 1e-3
+    assert float(d["correction_mean_norm_y"]) < 1e-3
 
 
 def test_fully_connected_k1_equals_centralized_sgda():

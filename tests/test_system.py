@@ -20,6 +20,28 @@ def _args(**over):
     return argparse.Namespace(**base)
 
 
+def test_scan_engine_history_matches_host_engine():
+    """--engine scan and --engine host share the sampler and metrics fn;
+    the logged histories must agree record for record (the state
+    trajectories are bit-identical — tests/test_engine.py)."""
+    res_scan = train_lib.train(_args(rounds=4, engine="scan", chunk=3))
+    res_host = train_lib.train(_args(rounds=4, engine="host"))
+    hs, hh = res_scan["history"], res_host["history"]
+    assert [r["round"] for r in hs] == [r["round"] for r in hh] == [0, 2, 3]
+    for rs, rh in zip(hs, hh):
+        for key in ("f_bar", "mean_loss", "eval_loss", "consensus_x",
+                    "y_bar_norm", "corr_x_norm", "corr_y_norm"):
+            assert rs[key] == pytest.approx(rh[key], rel=1e-5, abs=1e-7), key
+
+
+def test_train_rounds_zero_no_history():
+    """--rounds 0 / a log grid that never fires must not crash on
+    history[-1]."""
+    res = train_lib.train(_args(rounds=0))
+    assert res["history"] == []
+    assert res["final_consensus"] is None
+
+
 def test_train_driver_end_to_end():
     res = train_lib.train(_args())
     hist = res["history"]
@@ -47,6 +69,18 @@ def test_train_driver_checkpointing(tmp_path):
                           checkpoint_dir=str(tmp_path)))
     from repro.checkpoint import latest
     assert latest(str(tmp_path)) is not None
+
+
+def test_scan_engine_honors_checkpoint_cadence(tmp_path):
+    """checkpoint_every finer than the chunk must shrink the chunk, not
+    silently skip multiples (scan engine saves at chunk boundaries)."""
+    import os
+
+    train_lib.train(_args(rounds=6, engine="scan", chunk=16,
+                          checkpoint_every=2, checkpoint_dir=str(tmp_path)))
+    names = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert names == ["round_000002.npz", "round_000004.npz",
+                     "round_000006.npz"]
 
 
 def test_train_driver_wsd_schedule():
