@@ -2,25 +2,30 @@
 same heterogeneous NC-SC problem (paper claim: decentralized + local updates
 + heterogeneity robustness simultaneously).
 
-Runs through the ``repro.engine`` chunked scan — one compiled program per
-evaluation interval, ∇Φ checked on the chunk-boundary state (the same
-rounds-to-ε grid as the historical per-round loop; see
-``benchmarks.common.run_to_epsilon``)."""
+Thin wrapper over the ``convergence`` sweep definition — now
+seed-replicated: each algorithm is one vmapped cell of 8 seeds, so the
+comparison carries mean±std error bars instead of a single trajectory.
+Persisted to ``results/sweeps/convergence.json``.
+"""
 from __future__ import annotations
 
-from benchmarks.common import run_to_epsilon
+from repro.sweep import defs, run as sweep_run
+
+from benchmarks.common import replicate_row
 
 ALGOS = ["kgt_minimax", "gt_gda", "dsgda", "local_sgda"]
 
 
 def run(csv=print):
+    res = sweep_run.run_sweep(defs.SWEEPS["convergence"])
     rows = {}
     for algo in ALGOS:
-        hit, final, wall, _ = run_to_epsilon(
-            algorithm=algo, n=8, K=8, sigma=0.1, heterogeneity=2.0, eps=0.3,
-            eta_cx=0.01, eta_cy=0.1,
-            eta_s=0.5 if algo in ("kgt_minimax", "gt_gda") else 1.0,
-            max_rounds=1500)
-        rows[algo] = dict(rounds_to_eps=hit, final_grad=final, wall_s=round(wall, 1))
-        csv(f"convergence,{algo},rounds_to_eps={hit},final_grad={final:.4f}")
+        row = replicate_row(res, algorithm=algo)
+        cell = res["cells"].get(f"algorithm={algo}", {})
+        rows[algo] = dict(row, compile_s=cell.get("compile_s"),
+                          run_s=cell.get("run_s"))
+        csv(f"convergence,{algo},rounds_to_eps={row['rounds_to_eps']},"
+            f"final_grad={row['final_grad']:.4f}"
+            f",rounds_mean={row['rounds_to_eps_mean']}"
+            f",hit_rate={row['hit_rate']:.2f}")
     return rows

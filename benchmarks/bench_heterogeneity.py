@@ -1,23 +1,31 @@
 """V3: heterogeneity robustness — K-GT-Minimax's convergence is flat in the
 inter-client heterogeneity level; local SGDA (no tracking) degrades (the DH
-column of Table 1)."""
+column of Table 1).
+
+Thin wrapper over the ``heterogeneity`` sweep definition: one vmapped cell
+per algorithm (heterogeneity levels × seeds batched — heterogeneity only
+shapes the data arrays, so it rides the trajectory axis), persisted to
+``results/sweeps/heterogeneity.json``.
+"""
 from __future__ import annotations
 
-from benchmarks.common import run_to_epsilon
+from repro.sweep import defs, run as sweep_run
+
+from benchmarks.common import replicate_row
 
 LEVELS = [0.0, 1.0, 2.0, 4.0]
 
 
 def run(csv=print):
+    res = sweep_run.run_sweep(defs.SWEEPS["heterogeneity"])
     rows = {}
     for het in LEVELS:
         row = {}
         for algo in ("kgt_minimax", "local_sgda"):
-            hit, final, _, _ = run_to_epsilon(
-                algorithm=algo, heterogeneity=het, n=8, K=8, sigma=0.0,
-                eps=0.2, eta_cx=0.01, eta_cy=0.1,
-                eta_s=0.5 if algo == "kgt_minimax" else 1.0, max_rounds=1200)
-            row[algo] = dict(rounds_to_eps=hit, final_grad=final)
-            csv(f"heterogeneity,het={het},{algo},rounds={hit},final={final:.4f}")
+            row[algo] = replicate_row(res, heterogeneity=het, algorithm=algo)
+            csv(f"heterogeneity,het={het},{algo},"
+                f"rounds={row[algo]['rounds_to_eps']},"
+                f"final={row[algo]['final_grad']:.4f}"
+                f",rounds_mean={row[algo]['rounds_to_eps_mean']}")
         rows[het] = row
     return rows

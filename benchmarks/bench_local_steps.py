@@ -6,20 +6,29 @@ in the noise-dominated regime the stationarity floor improves with K
 (equivalently: rounds-to-ε for noise-limited ε falls with K — communication
 efficiency).  We report the final ‖∇Φ(x̄)‖ after a fixed 400 rounds under
 strong noise (σ=2), plus rounds-to-ε at a noise-limited target.
+
+Thin wrapper over the ``local_steps`` sweep definition: the whole grid runs
+as vmapped scan cells (one compiled program per static K cell, seeds
+batched) and persists ``results/sweeps/local_steps.json``; CSV lines quote
+the seed-0 trajectory, rows add mean±std over the seed replicates.
 """
 from __future__ import annotations
 
-from benchmarks.common import run_to_epsilon
+from repro.sweep import defs, run as sweep_run
+
+from benchmarks.common import replicate_row
 
 KS = [1, 2, 4, 8, 16]
 
 
 def run(csv=print):
+    res = sweep_run.run_sweep(defs.SWEEPS["local_steps"])
     rows = {}
     for K in KS:
-        hit, final, _, _ = run_to_epsilon(
-            K=K, n=8, sigma=2.0, heterogeneity=1.0, eps=0.6,
-            eta_cx=0.02 / K, eta_cy=0.2 / K, max_rounds=400, eval_every=20)
-        rows[K] = dict(rounds_to_eps=hit, final_grad=final)
-        csv(f"local_steps,K={K},rounds_to_eps={hit},final_grad={final:.4f}")
+        row = replicate_row(res, K=K)
+        rows[K] = row
+        csv(f"local_steps,K={K},rounds_to_eps={row['rounds_to_eps']},"
+            f"final_grad={row['final_grad']:.4f}"
+            f",final_grad_mean={row['final_grad_mean']:.4f}"
+            f",final_grad_std={row['final_grad_std']:.4f}")
     return rows

@@ -1,22 +1,26 @@
 """V5: linear speedup in n on the stochastic term — at fixed target accuracy
 in the noise-dominated regime, rounds-to-ε improves with client count.
 
-Runs through the ``repro.engine`` chunked scan — 4000-round budgets × 4
-client counts are exactly the dispatch-bound regime the engine amortizes
-(see ``benchmarks.common.run_to_epsilon`` for the evaluation grid)."""
+Thin wrapper over the ``speedup`` sweep definition (one vmapped cell per
+client count — n changes array shapes, so it is a static axis — seeds
+batched), persisted to ``results/sweeps/speedup.json``.
+"""
 from __future__ import annotations
 
-from benchmarks.common import run_to_epsilon
+from repro.sweep import defs, run as sweep_run
+
+from benchmarks.common import replicate_row
 
 NS = [2, 4, 8, 16]
 
 
 def run(csv=print):
+    res = sweep_run.run_sweep(defs.SWEEPS["speedup"])
     rows = {}
     for n in NS:
-        hit, final, _, _ = run_to_epsilon(
-            n=n, K=4, sigma=1.0, heterogeneity=0.5, topology="full", eps=0.45,
-            eta_cx=0.01, eta_cy=0.1, eta_s=1.0, max_rounds=4000, eval_every=20)
-        rows[n] = dict(rounds_to_eps=hit, final_grad=final)
-        csv(f"speedup,n={n},rounds={hit},final={final:.4f}")
+        row = replicate_row(res, n=n)
+        rows[n] = row
+        csv(f"speedup,n={n},rounds={row['rounds_to_eps']},"
+            f"final={row['final_grad']:.4f}"
+            f",rounds_mean={row['rounds_to_eps_mean']}")
     return rows

@@ -1,22 +1,29 @@
 """V4: topology dependence — rounds-to-ε vs spectral quantity p (Theorem 1's
-kappa^3/(p^2 eps^2) term): full > exp > ring in connectivity."""
+kappa^3/(p^2 eps^2) term): full > exp > ring in connectivity.
+
+Thin wrapper over the ``topology`` sweep definition (one vmapped cell per
+topology, seeds batched), persisted to ``results/sweeps/topology.json``.
+"""
 from __future__ import annotations
 
 from repro.core import mixing_matrix, spectral_gap
+from repro.sweep import defs, run as sweep_run
 
-from benchmarks.common import run_to_epsilon
+from benchmarks.common import replicate_row
 
 TOPOLOGIES = ["full", "exp", "torus", "ring"]
 
 
-def run(csv=print, n: int = 16):
+def run(csv=print):
+    spec = defs.SWEEPS["topology"]
+    n = spec.base["n"]
+    res = sweep_run.run_sweep(spec)
     rows = {}
     for topo in TOPOLOGIES:
         p = spectral_gap(mixing_matrix(topo, n))
-        hit, final, _, _ = run_to_epsilon(
-            topology=topo, n=n, K=4, sigma=0.0, heterogeneity=2.0, eps=0.2,
-            eta_cx=0.01, eta_cy=0.1, eta_s=min(0.9, 0.6 + 0.4 * p),
-            max_rounds=2500)
-        rows[topo] = dict(p=round(p, 4), rounds_to_eps=hit, final_grad=final)
-        csv(f"topology,{topo},p={p:.3f},rounds={hit},final={final:.4f}")
+        row = replicate_row(res, topology=topo)
+        rows[topo] = dict(p=round(p, 4), **row)
+        csv(f"topology,{topo},p={p:.3f},rounds={row['rounds_to_eps']},"
+            f"final={row['final_grad']:.4f}"
+            f",rounds_mean={row['rounds_to_eps_mean']}")
     return rows

@@ -5,33 +5,26 @@ the paper's claims are about convergence/communication complexity, not about
 any particular model.  Each benchmark emits CSV rows and returns a dict for
 EXPERIMENTS.md.
 
-Execution goes through ``repro.engine``: rounds run as compiled
-``eval_every``-long scan chunks (one dispatch per evaluation interval
-instead of one per round), with the exact ∇Φ oracle evaluated on the
-chunk-boundary state — the same grid the historical per-round loop used
-(after eval_every, 2·eval_every, … rounds) with an immediate stop at the
-first grid point under eps.  One deliberate delta: when ``eval_every``
-does not divide ``max_rounds``, the run's final state is also evaluated
-(the old loop left a tail of rounds unmeasured).
+``run_to_epsilon`` is the one-configuration entrypoint; since the sweep
+subsystem landed it delegates to ``repro.sweep.run.run_point``, which jits
+the *same* trajectory program the batched sweep cells vmap (per-trajectory
+stepsizes/σ/seed as traced operands, rounds as compiled ``eval_every``-long
+scan chunks, ∇Φ checked on the chunk-boundary state with an immediate stop
+at the first grid point under eps).  That sharing is what makes a batched
+sweep bit-identical to the sequential runs it replaces — see
+``repro.sweep.batched`` and tests/test_sweep.py.
+
+The grid-shaped benchmarks (``bench_{local_steps,heterogeneity,topology,
+speedup,convergence}``) are thin wrappers over the sweep definitions in
+``repro.sweep.defs`` and no longer loop over ``run_to_epsilon`` point by
+point; it remains the reference path (``bench_sweep`` measures the gap) and
+the one-off-experiment API.
 """
 from __future__ import annotations
 
-import time
+from repro.sweep import run as sweep_run
 
-import jax
-import jax.numpy as jnp
-
-from repro import engine as engine_lib
-from repro.configs.base import AlgorithmConfig
-from repro.core import (
-    init_state,
-    make_quadratic_data,
-    make_round_step,
-    mean_over_clients,
-    quadratic_problem,
-)
-
-DX, DY = 10, 5
+DX, DY = sweep_run.DX, sweep_run.DY
 
 
 def run_to_epsilon(
@@ -51,38 +44,37 @@ def run_to_epsilon(
     mixing_impl: str = "dense",
     eval_every: int = 10,
 ):
-    """Returns (rounds_to_eps or None, final ||grad Phi||, wall_s, history)."""
-    key = jax.random.PRNGKey(seed)
-    data = make_quadratic_data(key, n, dx=DX, dy=DY, heterogeneity=heterogeneity)
-    prob = quadratic_problem(data, sigma=sigma)
-    cfg = AlgorithmConfig(algorithm=algorithm, num_clients=n, local_steps=K,
-                          eta_cx=eta_cx, eta_cy=eta_cy, eta_sx=eta_s, eta_sy=eta_s,
-                          topology=topology, mixing_impl=mixing_impl)
-    cb = {k: v for k, v in data.items() if k != "mu"}
-    kb = jax.tree.map(
-        lambda v: jnp.broadcast_to(v[None], (cfg.local_steps, *v.shape)), cb)
-    st = init_state(prob, cfg, key, init_batch=cb,
-                    init_keys=jax.random.split(key, n))
+    """Returns ``(rounds_to_eps or None, final ‖∇Φ‖, timing, history)``.
 
-    sampler = engine_lib.make_fixed_batch_sampler(
-        kb, local_steps=cfg.local_steps, num_clients=n, seed=seed)
-    build = engine_lib.make_chunk_builder(
-        make_round_step(prob, cfg), sampler)
-    grad_fn = jax.jit(lambda s: prob.phi_grad_norm(mean_over_clients(s.x)))
+    ``timing`` splits the wall clock into ``compile_s`` (XLA compilation,
+    AOT-timed), ``setup_s`` (data/init), and steady-state ``run_s`` — the
+    historical single ``wall_s`` folded first-chunk compilation into every
+    rounds/s and time-to-ε number.  ``timing["wall_s"]`` is still the total.
+    """
+    return sweep_run.run_point(dict(
+        n=n, K=K, sigma=sigma, heterogeneity=heterogeneity,
+        topology=topology, algorithm=algorithm, eta_cx=eta_cx,
+        eta_cy=eta_cy, eta_s=eta_s, eps=eps, max_rounds=max_rounds,
+        seed=seed, mixing_impl=mixing_impl, eval_every=eval_every))
 
-    hist = []
-    hit = None
-    final_round = jnp.int32(max_rounds - 1)
-    t0 = time.time()
-    r = 0
-    while r < max_rounds:
-        length = min(eval_every, max_rounds - r)
-        st, _ = build(length)(st, final_round)
-        r += length
-        g = float(grad_fn(st))
-        hist.append((r, g))
-        if g < eps:
-            hit = r
-            break
-    final = hist[-1][1] if hist else float("nan")
-    return hit, final, time.time() - t0, hist
+
+def seed0_point(result: dict, **params) -> dict:
+    """The seed-0 record of a replicate group in a sweep result — the
+    benchmarks' CSV lines quote it so their rows stay comparable with the
+    historical one-run-per-point output."""
+    pts = sweep_run.points_where(result, seed=0, **params)
+    if not pts:
+        raise KeyError(f"no seed-0 point matching {params}")
+    return pts[0]
+
+
+def replicate_row(result: dict, **params) -> dict:
+    """Benchmark row for one figure point: seed-0 values (historical keys)
+    + mean±std over the seed replicates."""
+    p0 = seed0_point(result, **params)
+    agg = sweep_run.summarize(sweep_run.points_where(result, **params))
+    return {
+        "rounds_to_eps": p0["rounds_to_eps"],
+        "final_grad": p0["final_grad"],
+        **agg,
+    }

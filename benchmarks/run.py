@@ -1,7 +1,9 @@
 """Benchmark runner — one benchmark per paper claim (Table 1 and Theorem 1's
 scaling terms) plus the roofline report over the dry-run artifacts.
 
-Prints ``name,key=value,...`` CSV lines and writes results/benchmarks.json.
+Prints ``name,key=value,...`` CSV lines and writes results/benchmarks.json
+(repo-root-relative, stamped with provenance and merged — partial runs like
+``run gossip`` in CI don't clobber earlier benchmarks).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run convergence topology
@@ -20,9 +22,13 @@ from benchmarks import (
     bench_heterogeneity,
     bench_local_steps,
     bench_speedup,
+    bench_sweep,
     bench_topology,
     roofline,
 )
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_PATH = os.path.join(REPO_ROOT, "results", "benchmarks.json")
 
 BENCHES = {
     "convergence": bench_convergence.run,      # Table 1 proxy: vs baselines
@@ -32,8 +38,15 @@ BENCHES = {
     "speedup": bench_speedup.run,              # V5: linear speedup in n
     "gossip": bench_gossip.run,                # round-epilogue lowerings
     "engine": bench_engine.run,                # host loop vs scanned chunks
+    "sweep": bench_sweep.run,                  # sequential loop vs vmapped cell
     "roofline": roofline.run,                  # deliverable (g)
 }
+
+
+def _provenance() -> dict:
+    from repro.sweep import store as sweep_store
+
+    return sweep_store.provenance()
 
 
 def main() -> None:
@@ -49,19 +62,19 @@ def main() -> None:
             print(f"{name},SKIPPED,missing artifact: {e}", flush=True)
             continue
         print(f"{name},wall_s={time.time()-t0:.1f}", flush=True)
-    os.makedirs("/root/repo/results", exist_ok=True)
-    path = "/root/repo/results/benchmarks.json"
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     # merge into existing results so partial runs (e.g. `run gossip` in CI)
     # don't clobber earlier benchmarks
     merged = {}
-    if os.path.exists(path):
+    if os.path.exists(RESULTS_PATH):
         try:
-            with open(path) as f:
+            with open(RESULTS_PATH) as f:
                 merged = json.load(f)
         except (OSError, ValueError):
             merged = {}
     merged.update(results)
-    with open(path, "w") as f:
+    merged["_provenance"] = _provenance()
+    with open(RESULTS_PATH, "w") as f:
         json.dump(merged, f, indent=1, default=str)
 
 

@@ -11,9 +11,14 @@
 #      the scan engine, once on plain host jit and once on a 4-fake-device
 #      decentralized mesh (scanned chunk with donated sharded state +
 #      device-side sampling under GSPMD).
-#   4. benchmarks.run gossip engine — the round-epilogue bench (collective
+#   4. repro.sweep.run smoke — a tiny 2-seed x 2-heterogeneity sweep
+#      end-to-end on the batched (vmapped-cell) path, including the
+#      results/sweeps/smoke.json store write.
+#   5. benchmarks.run gossip engine — the round-epilogue bench (collective
 #      counts per mixing_impl) and the engine bench (rounds/s: per-round
 #      host dispatch vs scanned chunks), merged into results/benchmarks.json.
+#      (`benchmarks.run sweep` runs the heavier batched-vs-sequential sweep
+#      bench; it is registered but not part of the smoke.)
 #
 # Usage: scripts/smoke.sh [--archs ARCH ...]     (default: qwen2-0.5b)
 set -euo pipefail
@@ -37,6 +42,9 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 python -m repro.launch.train --arch qwen2-0.5b --reduced --engine scan \
     --mesh decentralized --rounds 4 --chunk 2 --clients 4 --local-steps 2 \
     --batch 2 --seq-len 32 --groups 4 --log-every 2
+
+echo "== tiny sweep end-to-end (batched cell + store write) =="
+python -m repro.sweep.run smoke
 
 echo "== gossip + engine benches (merged into results/benchmarks.json) =="
 python -m benchmarks.run gossip engine

@@ -4,6 +4,7 @@ from repro.core.kgt_minimax import (  # noqa: F401
     init_state,
     make_round_step,
     mean_over_clients,
+    point_etas,
 )
 from repro.core.minimax import MinimaxProblem  # noqa: F401
 from repro.core.mixing import (  # noqa: F401
@@ -18,6 +19,7 @@ from repro.core.objectives import (  # noqa: F401
     adversarial_problem,
     dro_problem,
     make_quadratic_data,
+    quadratic_cell_problem,
     quadratic_problem,
 )
 from repro.core.topology import mixing_matrix, spectral_gap  # noqa: F401

@@ -100,18 +100,51 @@ def init_state(
     return KGTState(x=x, y=y, cx=cx, cy=cy, round=jnp.int32(0))
 
 
+def point_etas(cfg: AlgorithmConfig) -> dict:
+    """The traced-stepsize bundle for ``make_round_step(traced_etas=True)``.
+
+    ``corr_x``/``corr_y`` are the line-7/8 correction scales ±1/(K·η_c),
+    precomputed **host-side in float64** — the same Python-float arithmetic
+    the static path performs — so a trajectory run with traced etas is
+    bit-identical to one compiled with the etas baked in (the in-graph f32
+    division ``1/(K·η)`` can differ from the f64 value by an ulp).
+    """
+    k = 1 if cfg.algorithm in ("dsgda", "gt_gda") else cfg.local_steps
+    return {
+        "eta_cx": np.float32(cfg.eta_cx),
+        "eta_cy": np.float32(cfg.eta_cy),
+        "eta_sx": np.float32(cfg.eta_sx),
+        "eta_sy": np.float32(cfg.eta_sy),
+        "corr_x": np.float32(1.0 / (k * cfg.eta_cx)),
+        "corr_y": np.float32(-1.0 / (k * cfg.eta_cy)),
+    }
+
+
 def make_round_step(
     problem: MinimaxProblem,
     cfg: AlgorithmConfig,
     w: Optional[np.ndarray] = None,
     lr_scale: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+    *,
+    traced_etas: bool = False,
 ):
     """Builds round_step(state, batches, keys) -> state.
 
     ``batches``: pytree with leading dims (K, n, …) — one per (local step,
     client).  ``keys``: (K, n) PRNG keys.  ``lr_scale``: optional schedule
     multiplier as a function of the round index.
+
+    ``traced_etas=True`` changes the signature to
+    ``round_step(state, batches, keys, etas)`` where ``etas`` is the scalar
+    bundle of :func:`point_etas` carried as traced values — what lets
+    ``repro.sweep`` vmap one compiled program over trajectories that differ
+    only in their stepsizes.  The stepsizes in ``cfg`` are ignored on that
+    path; compose any schedule into the eta values instead of ``lr_scale``.
     """
+    if traced_etas and lr_scale is not None:
+        raise ValueError(
+            "traced_etas carries per-trajectory stepsizes; fold the schedule "
+            "into the eta values instead of passing lr_scale")
     if cfg.mixing_impl not in mixing_lib.MIXING_IMPLS:
         raise ValueError(
             f"unknown mixing_impl {cfg.mixing_impl!r}: {mixing_lib.MIXING_IMPLS}")
@@ -152,15 +185,8 @@ def make_round_step(
     k_steps = 1 if algo in ("dsgda", "gt_gda") else cfg.local_steps
     grads_v = jax.vmap(problem.grads)
 
-    # Communication stepsizes (η_s = 1 for the no-tracking baselines: plain
-    # parameter averaging x ← W(x + Δx)).
-    eta_sx = cfg.eta_sx if cfg.algorithm in ("kgt_minimax", "gt_gda") else 1.0
-    eta_sy = cfg.eta_sy if cfg.algorithm in ("kgt_minimax", "gt_gda") else 1.0
-
-    def round_step(state: KGTState, batches, keys) -> KGTState:
-        scale = lr_scale(state.round) if lr_scale is not None else 1.0
-        eta_cx = cfg.eta_cx * scale
-        eta_cy = cfg.eta_cy * scale
+    def _round(state: KGTState, batches, keys,
+               eta_cx, eta_cy, eta_sx, eta_sy, corr_x, corr_y) -> KGTState:
         mix = None if packed else make_mix(state.round)
 
         def local_step(carry, inp):
@@ -204,8 +230,6 @@ def make_round_step(
                 return KGTState(
                     x=packing.unpack(xb, spec_x), y=packing.unpack(yb, spec_y),
                     cx=state.cx, cy=state.cy, round=state.round + 1)
-            corr_x = 1.0 / (k_steps * eta_cx)
-            corr_y = -1.0 / (k_steps * eta_cy)
             spec_cx = packing.pack_spec(state.cx)
             spec_cy = packing.pack_spec(state.cy)
             xb, cxb = kernel_ops.fused_gossip_round(
@@ -247,8 +271,8 @@ def make_round_step(
 
         if track:
             # c^x += (Δx − WΔx)/(K η_cx) ;  c^y −= (Δy − WΔy)/(K η_cy)
-            cx = _tree_axpy(1.0 / (k_steps * eta_cx), _tree_sub(dx, mdx), state.cx)
-            cy = _tree_axpy(-1.0 / (k_steps * eta_cy), _tree_sub(dy, mdy), state.cy)
+            cx = _tree_axpy(corr_x, _tree_sub(dx, mdx), state.cx)
+            cy = _tree_axpy(corr_y, _tree_sub(dy, mdy), state.cy)
         else:
             cx, cy = state.cx, state.cy
 
@@ -257,6 +281,33 @@ def make_round_step(
         y_new = _tree_axpy(eta_sy, mdy, my)
 
         return KGTState(x=x_new, y=y_new, cx=cx, cy=cy, round=state.round + 1)
+
+    if traced_etas:
+        def round_step(state: KGTState, batches, keys, etas) -> KGTState:
+            # η_s = 1 for the no-tracking baselines (plain parameter
+            # averaging), exactly like the static path below
+            esx = etas["eta_sx"] if track else 1.0
+            esy = etas["eta_sy"] if track else 1.0
+            return _round(state, batches, keys, etas["eta_cx"], etas["eta_cy"],
+                          esx, esy,
+                          etas["corr_x"] if track else None,
+                          etas["corr_y"] if track else None)
+
+        return round_step
+
+    # Communication stepsizes (η_s = 1 for the no-tracking baselines: plain
+    # parameter averaging x ← W(x + Δx)).
+    eta_sx = cfg.eta_sx if track else 1.0
+    eta_sy = cfg.eta_sy if track else 1.0
+
+    def round_step(state: KGTState, batches, keys) -> KGTState:
+        scale = lr_scale(state.round) if lr_scale is not None else 1.0
+        eta_cx = cfg.eta_cx * scale
+        eta_cy = cfg.eta_cy * scale
+        corr_x = 1.0 / (k_steps * eta_cx) if track else None
+        corr_y = -1.0 / (k_steps * eta_cy) if track else None
+        return _round(state, batches, keys, eta_cx, eta_cy, eta_sx, eta_sy,
+                      corr_x, corr_y)
 
     return round_step
 

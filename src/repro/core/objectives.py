@@ -115,6 +115,50 @@ def quadratic_problem(data: Dict[str, Any], sigma: float = 0.0) -> MinimaxProble
     )
 
 
+def quadratic_cell_problem(dx: int, dy: int, mu: float = 1.0,
+                           noise: bool = False) -> MinimaxProblem:
+    """The quadratic with *all* per-client coefficients read from the batch.
+
+    ``quadratic_problem`` closes over one client-stacked ``data`` dict and a
+    static noise scale — one traced program per (data, sigma) point.  A sweep
+    cell (``repro.sweep``) instead vmaps a single program over a trajectory
+    axis where the data (heterogeneity, seed) and sigma are just array
+    leaves, so here they arrive through ``batch``: the per-client slice is
+    ``{"A", "B", "b", "q"}`` plus, when ``noise``, a scalar ``"sigma"``.
+
+    The value expression is term-for-term the one in ``quadratic_problem``
+    (that is what makes a batched trajectory bit-identical to the same point
+    run through the static path).  Whether noise ops exist in the graph is a
+    *static* program property — a cell mixing sigma=0 with sigma>0 must be
+    split by the grid layer, not multiplied by a traced zero.
+
+    No Φ oracle: the exact ``phi_grad`` needs the client-*mean* coefficients,
+    which the sweep runner evaluates itself over its stacked constants.
+    """
+
+    def value(x, y, batch, key):
+        f = (
+            0.5 * x @ (batch["A"] @ x)
+            + batch["q"] @ x
+            + y @ (batch["B"] @ x)
+            + batch["b"] @ y
+            - 0.5 * mu * jnp.sum(y * y)
+        )
+        if noise:
+            kx, ky = jax.random.split(key)
+            f = f + batch["sigma"] * (
+                jax.random.normal(kx, (dx,)) @ x + jax.random.normal(ky, (dy,)) @ y
+            )
+        return f
+
+    return MinimaxProblem(
+        init_x=lambda key: jax.random.normal(key, (dx,)),
+        init_y=lambda key: jnp.zeros((dy,)),
+        value=value,
+        mu=mu,
+    )
+
+
 # ---------------------------------------------------------------------------
 # DRO over a language model
 # ---------------------------------------------------------------------------

@@ -12,6 +12,7 @@ from repro.engine.engine import (  # noqa: F401
     records_from_buffer,
     row_to_record,
     run,
+    timed_chunk_builder,
 )
 from repro.engine.diagnostics import (  # noqa: F401
     dro_metrics_fn,

@@ -120,6 +120,30 @@ def smoke_arch(arch: str) -> bool:
         print(f"[smoke] {arch}: engine chunk FAILED: {type(e).__name__}: {e}",
               flush=True)
 
+    # the vmapped sweep cell (repro.sweep): a stacked trajectory batch as
+    # one scanned program with the batch axis GSPMD-sharded over 'clients'
+    # of the decentralized mesh — the batch-parallel layout sweeps use
+    t0 = time.time()
+    try:
+        import jax.numpy as jnp
+
+        from repro.sweep import batched as sweep_batched
+        from repro.sweep import run as sweep_run
+
+        p = dict(sweep_run.DEFAULT_POINT, n=4, K=2, max_rounds=8,
+                 eval_every=4)
+        prepared = [sweep_run.prepare_trajectory(dict(p, seed=s))
+                    for s in range(4)]
+        trajs = sweep_batched.tree_stack([tr for tr, _ in prepared])
+        build, _ = sweep_run._cell_programs(p, batched=True, mesh=mesh)
+        build(4).lower(trajs, jnp.int32(7)).compile()
+        print(f"[smoke] {arch}: sweep cell (vmap x4 trajs, sharded batch "
+              f"axis) compiled ({time.time()-t0:.1f}s)", flush=True)
+    except Exception as e:
+        ok = False
+        print(f"[smoke] {arch}: sweep cell FAILED: {type(e).__name__}: {e}",
+              flush=True)
+
     t0 = time.time()
     smesh = compat.make_mesh((4, 2), ("data", "model"))
     try:

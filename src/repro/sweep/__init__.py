@@ -1,0 +1,33 @@
+"""Experiment-sweep subsystem: whole hyperparameter grids as single
+compiled programs (see ``docs/architecture.md``, "The sweep subsystem").
+
+``grid``    — GridSpec with static vs batchable axes, static-cell partition.
+``batched`` — the vmapped trajectory chunk programs + early-stop freeze.
+``run``     — cell/point drivers, ``run_sweep``, the ``repro.sweep.run`` CLI.
+``defs``    — the paper-figure sweep definitions (V2–V5 + convergence).
+``store``   — ``results/sweeps/<name>.json`` persistence with provenance.
+"""
+from repro.sweep.batched import (  # noqa: F401
+    Trajectories,
+    batch_sharding,
+    make_batched_chunk_builder,
+    make_quadratic_traj_sampler,
+    make_trajectory_chunk_builder,
+    tree_index,
+    tree_stack,
+    trajectory_chunk_program,
+)
+from repro.sweep.grid import (  # noqa: F401
+    Axis,
+    Cell,
+    GridSpec,
+    batch_axis,
+    config_hash,
+    point_key,
+    static_axis,
+)
+# NOTE: repro.sweep.run (drivers + CLI) and repro.sweep.defs (the sweep
+# definitions) are deliberately not imported here: `python -m
+# repro.sweep.run` would re-execute an already-imported module (runpy
+# RuntimeWarning), and both are cheap to import explicitly:
+#     from repro.sweep import run as sweep_run

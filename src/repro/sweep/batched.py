@@ -1,0 +1,194 @@
+"""Vmapped trajectory execution: a whole static cell as one scan program.
+
+The execution unit is a :class:`Trajectories` pytree — algorithm state plus
+everything that varies *within* a static cell carried as array leaves: the
+per-client quadratic coefficients (``batches``), the traced stepsize bundle
+(``etas``, see :func:`repro.core.point_etas`), the sampler ``seed``, and the
+early-stop ``active`` mask.
+
+``trajectory_chunk_program`` builds the **unbatched** program for one
+trajectory — ``repro.engine.chunk_program`` (scan over rounds, device-side
+sampling, optional metrics buffer) wrapped so the stepsizes/seed come from
+the trajectory leaves and a finished trajectory is frozen by its ``active``
+flag.  ``make_batched_chunk_builder`` jits ``vmap`` of exactly that program
+over a stacked ``(B, …)`` trajectory axis.
+
+This structural sharing is the bit-identity story: the sequential reference
+path (``benchmarks.common.run_to_epsilon`` → ``repro.sweep.run.run_point``)
+jits the *same* unbatched program, so the batched cell is literally its
+vmap.  What does **not** survive bit-exactly is baking per-trajectory
+scalars in as compile-time constants — XLA fuses constant-operand graphs
+differently (an ulp per round) — which is why sigma and the etas are traced
+operands on *both* paths, not closure constants.
+
+The early-stop mask keeps the batch scanning after individual trajectories
+converge: a frozen trajectory still flows through the scan (vmap has no
+per-slice control flow) but a ``where(active, new, old)`` on every state
+leaf — ``round`` included — pins it to the exact chunk boundary at which
+the sequential ``stop_fn`` would have exited.
+
+The batch axis is embarrassingly parallel, so when a ``jax.sharding.Mesh``
+is supplied the stacked leaves are GSPMD-sharded over one of its axes
+(default: the ``clients`` axis of the ``repro.dist`` decentralized mesh —
+for sweep workloads batch-parallel beats client-parallel) and hundreds of
+trajectories still cost one dispatch per chunk.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine as engine_lib
+from repro.dist.sharding import CLIENTS
+
+# (round_idx, traj) -> (batches, keys): the trajectory-aware analogue of
+# engine.sampler's Sampler protocol.
+TrajSampler = Callable[[jnp.ndarray, "Trajectories"], Any]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Trajectories:
+    """One trajectory (unbatched) or a stacked cell of B trajectories —
+    every leaf gains a leading ``(B, …)`` dim under :func:`tree_stack`."""
+    state: Any            # KGTState (n, …) leaves
+    batches: Any          # fixed per-round batch pytree, (K, n, …) leaves
+    etas: Dict[str, Any]  # traced stepsize bundle (repro.core.point_etas)
+    seed: jnp.ndarray     # int32 sampler seed
+    active: jnp.ndarray   # bool — False freezes the trajectory
+
+
+def tree_stack(trees):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_index(tree, i: int):
+    """Slice trajectory ``i`` back out of a stacked pytree (host-side)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def trajectory_chunk_program(
+    round_step: Callable[[Any, Any, Any, Any], Any],
+    traj_sampler: TrajSampler,
+    metrics_fn=None,
+    *,
+    log_every: int = 1,
+    length: int,
+):
+    """Unbatched ``chunk(traj, final_round) -> (traj, buffer)`` for one
+    trajectory.  ``round_step`` is a ``make_round_step(traced_etas=True)``
+    step; the engine's chunk program does the scanning/sampling/metrics
+    work, this wrapper routes the trajectory leaves into it and applies the
+    ``active`` freeze to the resulting state."""
+
+    def chunk(traj: Trajectories, final_round):
+        step = lambda st, b, k: round_step(st, b, k, traj.etas)
+        sampler = lambda round_idx: traj_sampler(round_idx, traj)
+        mfn = None
+        if metrics_fn is not None:
+            mfn = lambda st, b: metrics_fn(st, b, traj)
+        program = engine_lib.chunk_program(
+            step, sampler, mfn, log_every=log_every, length=length)
+        new_state, buf = program(traj.state, final_round)
+        frozen = jax.tree.map(
+            lambda new, old: jnp.where(traj.active, new, old),
+            new_state, traj.state)
+        return dataclasses.replace(traj, state=frozen), buf
+
+    return chunk
+
+
+def make_trajectory_chunk_builder(
+    round_step,
+    traj_sampler: TrajSampler,
+    metrics_fn=None,
+    *,
+    log_every: int = 1,
+    donate: bool = True,
+):
+    """``build(length) -> jitted chunk(traj, final_round)`` for ONE
+    trajectory — the sequential reference execution (`run_point`).  Same
+    per-length caching contract as ``engine.make_chunk_builder``."""
+    cache: Dict[int, Any] = {}
+
+    def build(length: int):
+        if length not in cache:
+            fn = trajectory_chunk_program(
+                round_step, traj_sampler, metrics_fn,
+                log_every=log_every, length=length)
+            cache[length] = jax.jit(fn, donate_argnums=(0,) if donate else ())
+        return cache[length]
+
+    return build
+
+
+def batch_sharding(mesh, axis: str = CLIENTS):
+    """NamedSharding placing the stacked trajectory axis (the leading dim of
+    every ``Trajectories`` leaf) on ``axis`` of ``mesh``.  Used as a jit
+    in/out-sharding *prefix*: one spec covers the whole pytree."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    return NamedSharding(mesh, P(axis))
+
+
+def make_batched_chunk_builder(
+    round_step,
+    traj_sampler: TrajSampler,
+    metrics_fn=None,
+    *,
+    log_every: int = 1,
+    donate: bool = True,
+    mesh=None,
+    mesh_axis: str = CLIENTS,
+):
+    """``build(length) -> jitted chunk(trajs, final_round)`` over a stacked
+    ``(B, …)`` cell — ``vmap`` of :func:`trajectory_chunk_program`, one
+    dispatch per chunk for the whole batch.
+
+    With ``mesh``, the batch axis of every input/output leaf is sharded over
+    ``mesh_axis`` (B must divide the axis size ·k); the metrics buffer, when
+    present, is left for GSPMD to place (it is read back per chunk anyway).
+    """
+    cache: Dict[int, Any] = {}
+
+    def build(length: int):
+        if length not in cache:
+            fn = trajectory_chunk_program(
+                round_step, traj_sampler, metrics_fn,
+                log_every=log_every, length=length)
+            batched = jax.vmap(fn, in_axes=(0, None))
+            kwargs: dict = {"donate_argnums": (0,) if donate else ()}
+            if mesh is not None:
+                shard = batch_sharding(mesh, mesh_axis)
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+
+                kwargs["in_shardings"] = (shard, NamedSharding(mesh, P()))
+                kwargs["out_shardings"] = (shard, None)
+            cache[length] = jax.jit(batched, **kwargs)
+        return cache[length]
+
+    return build
+
+
+def make_quadratic_traj_sampler(*, local_steps: int, num_clients: int):
+    """The quadratic benchmark sampler as a :data:`TrajSampler`: fixed
+    per-round batches from the trajectory, oracle keys from the trajectory's
+    *traced* seed on the historical ``PRNGKey(seed·7919 + t)`` schedule
+    (``engine.make_fixed_batch_sampler``'s, with the seed an operand instead
+    of a Python constant — integer key arithmetic is exact, so the drawn
+    noise is unchanged)."""
+
+    def sample(round_idx, traj: Trajectories):
+        keys = jax.random.split(
+            jax.random.PRNGKey(traj.seed * 7919 + round_idx),
+            local_steps * num_clients,
+        ).reshape(local_steps, num_clients, 2)
+        return traj.batches, keys
+
+    return sample

@@ -1,0 +1,105 @@
+"""The paper-figure sweeps, encoded as :class:`repro.sweep.grid.GridSpec`\\s.
+
+Each definition reproduces one of the theory-validation experiments (V2–V5
+in DESIGN.md / Theorem 1's scaling terms) as a *grid* rather than a row of
+one-off runs: the varied quantity plus a seed-replicate axis, so every
+figure point carries error bars.  Axis kinds follow the compilation
+boundary — K / topology / n / algorithm change the traced program (static),
+seed / heterogeneity / sigma / stepsizes are array leaves (batchable).
+
+``benchmarks/bench_{local_steps,heterogeneity,topology,speedup,convergence}``
+are thin wrappers over these definitions; ``python -m repro.sweep.run
+<name>`` runs them standalone and persists ``results/sweeps/<name>.json``.
+"""
+from __future__ import annotations
+
+from repro.core import mixing_matrix, spectral_gap
+from repro.sweep.grid import GridSpec, batch_axis, static_axis
+
+SEEDS = (0, 1, 2, 3)
+
+SWEEPS = {}
+
+
+def register(spec: GridSpec) -> GridSpec:
+    SWEEPS[spec.name] = spec
+    return spec
+
+
+def _eta_over_k(p):
+    """V2's theory-prescribed stepsizes: η_c ∝ 1/K for stability."""
+    return {"eta_cx": 0.02 / p["K"], "eta_cy": 0.2 / p["K"]}
+
+
+def _eta_s_by_algo(p):
+    """η_s = 0.5 for the tracking variants, 1.0 (plain averaging) else."""
+    return {"eta_s": 0.5 if p["algorithm"] in ("kgt_minimax", "gt_gda") else 1.0}
+
+
+def _eta_s_by_gap(p):
+    """V4's connectivity-matched communication stepsize."""
+    gap = spectral_gap(mixing_matrix(p["topology"], p["n"]))
+    return {"eta_s": min(0.9, 0.6 + 0.4 * gap)}
+
+
+# V2: T vs K — local updates amortize gradient noise (σ²/(nK ε⁴) term).
+register(GridSpec(
+    name="local_steps",
+    base=dict(n=8, sigma=2.0, heterogeneity=1.0, eps=0.6, eta_s=0.5,
+              max_rounds=400, eval_every=20),
+    axes=(static_axis("K", 1, 2, 4, 8, 16),
+          batch_axis("seed", *SEEDS)),
+    derive=_eta_over_k,
+))
+
+# V3: heterogeneity robustness — tracking flat in DH, local SGDA degrades.
+register(GridSpec(
+    name="heterogeneity",
+    base=dict(n=8, K=8, sigma=0.0, eps=0.2, eta_cx=0.01, eta_cy=0.1,
+              max_rounds=1200),
+    axes=(static_axis("algorithm", "kgt_minimax", "local_sgda"),
+          batch_axis("heterogeneity", 0.0, 1.0, 2.0, 4.0),
+          batch_axis("seed", *SEEDS)),
+    derive=_eta_s_by_algo,
+))
+
+# V4: topology dependence — rounds-to-ε vs spectral quantity p.
+register(GridSpec(
+    name="topology",
+    base=dict(n=16, K=4, sigma=0.0, heterogeneity=2.0, eps=0.2,
+              eta_cx=0.01, eta_cy=0.1, max_rounds=2500),
+    axes=(static_axis("topology", "full", "exp", "torus", "ring"),
+          batch_axis("seed", *SEEDS)),
+    derive=_eta_s_by_gap,
+))
+
+# V5: linear speedup in n on the stochastic term.
+register(GridSpec(
+    name="speedup",
+    base=dict(K=4, sigma=1.0, heterogeneity=0.5, topology="full", eps=0.45,
+              eta_cx=0.01, eta_cy=0.1, eta_s=1.0, max_rounds=4000,
+              eval_every=20),
+    axes=(static_axis("n", 2, 4, 8, 16),
+          batch_axis("seed", *SEEDS)),
+))
+
+# Table-1 proxy, seed-replicated: mean±std across 8 seeds per algorithm.
+register(GridSpec(
+    name="convergence",
+    base=dict(n=8, K=8, sigma=0.1, heterogeneity=2.0, eps=0.3,
+              eta_cx=0.01, eta_cy=0.1, max_rounds=1500),
+    axes=(static_axis("algorithm", "kgt_minimax", "gt_gda", "dsgda",
+                      "local_sgda"),
+          batch_axis("seed", *range(8))),
+    derive=_eta_s_by_algo,
+))
+
+# CI smoke: 2 seeds × 2 heterogeneity levels, one tiny cell end-to-end
+# (batched path + store write) — scripts/smoke.sh runs this.
+register(GridSpec(
+    name="smoke",
+    base=dict(n=4, K=2, sigma=0.5, eps=0.5, eta_cx=0.02, eta_cy=0.2,
+              eta_s=0.5, max_rounds=40, eval_every=10),
+    axes=(batch_axis("heterogeneity", 0.5, 1.5),
+          batch_axis("seed", 0, 1)),
+))

@@ -1,0 +1,383 @@
+"""Sweep runner + CLI: drive whole hyperparameter grids as compiled cells.
+
+A *point* is one experiment configuration — the kwargs of the historical
+``benchmarks.common.run_to_epsilon`` (synthetic NC-SC quadratic, exact ∇Φ
+oracle, rounds-to-ε on an ``eval_every`` grid).  :func:`run_point` executes
+one point sequentially; :func:`run_cell` executes a whole static cell as a
+single vmapped scan program (`repro.sweep.batched`), with one dispatch per
+``eval_every`` chunk for the entire batch and the per-trajectory early-stop
+mask freezing converged trajectories at exactly the boundary the sequential
+``stop_fn`` would have stopped.  Both paths jit the *same* unbatched
+trajectory program, so their trajectories are bit-identical
+(tests/test_sweep.py holds every cell of small grids to that).
+
+  PYTHONPATH=src python -m repro.sweep.run smoke           # tiny end-to-end
+  PYTHONPATH=src python -m repro.sweep.run local_steps topology
+  PYTHONPATH=src python -m repro.sweep.run --list
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine as engine_lib
+from repro.configs.base import AlgorithmConfig
+from repro.core import (
+    init_state,
+    make_quadratic_data,
+    make_round_step,
+    point_etas,
+    quadratic_cell_problem,
+)
+from repro.sweep import batched as batched_lib
+from repro.sweep import grid as grid_lib
+from repro.sweep import store as store_lib
+
+DX, DY = 10, 5  # the benchmarks' quadratic geometry (benchmarks.common)
+
+# One-configuration defaults == run_to_epsilon's signature defaults.
+DEFAULT_POINT: Dict[str, Any] = dict(
+    n=8, K=4, sigma=0.1, heterogeneity=1.0, topology="ring",
+    algorithm="kgt_minimax", eta_cx=0.01, eta_cy=0.1, eta_s=0.5,
+    eps=0.3, max_rounds=2000, seed=0, mixing_impl="dense", eval_every=10,
+)
+
+# Point parameters that change the traced program: same-valued across every
+# point of a cell, enforced at cell build time.  (sigma is special-cased:
+# its *value* is a leaf but sigma>0 toggles the noise ops — grid axes over
+# sigma must declare ``cell_key=lambda s: s > 0``.)
+STATIC_KEYS = ("algorithm", "n", "K", "topology", "mixing_impl",
+               "eps", "max_rounds", "eval_every")
+
+
+def _full_point(p: Dict[str, Any]) -> Dict[str, Any]:
+    full = dict(DEFAULT_POINT)
+    unknown = set(p) - set(full)
+    if unknown:
+        raise ValueError(f"unknown point parameters {sorted(unknown)}")
+    full.update(p)
+    return full
+
+
+def _cfg(p: Dict[str, Any]) -> AlgorithmConfig:
+    return AlgorithmConfig(
+        algorithm=p["algorithm"], num_clients=p["n"], local_steps=p["K"],
+        eta_cx=p["eta_cx"], eta_cy=p["eta_cy"], eta_sx=p["eta_s"],
+        eta_sy=p["eta_s"], topology=p["topology"],
+        mixing_impl=p["mixing_impl"])
+
+
+# Jitted per-point setup, cached on the static parameters it bakes in.
+# Seed / heterogeneity / sigma are traced operands, so one compile serves
+# every point of a cell (and any cell sharing the statics) — eager setup
+# was ~2s/point of small-op dispatch, the dominant cost of small sweeps.
+_PREPARERS: Dict[tuple, Any] = {}
+
+
+def _preparer(p: Dict[str, Any]):
+    noise = p["sigma"] > 0.0
+    cache_key = (p["n"], p["algorithm"], noise)
+    if cache_key in _PREPARERS:
+        return _PREPARERS[cache_key]
+    problem = quadratic_cell_problem(DX, DY, mu=1.0, noise=noise)
+    cfg = _cfg(p)  # init_state only reads algorithm/num_clients/dtype
+
+    def prep(seed, het, sigma):
+        key = jax.random.PRNGKey(seed)
+        data = make_quadratic_data(key, p["n"], dx=DX, dy=DY,
+                                   heterogeneity=het)
+        cb = {k: v for k, v in data.items() if k != "mu"}
+        if noise:
+            cb = dict(cb, sigma=jnp.full((p["n"],), sigma, jnp.float32))
+        st = init_state(problem, cfg, key, init_batch=cb,
+                        init_keys=jax.random.split(key, p["n"]))
+        consts = {
+            "a_bar": data["A"].mean(0), "b_bar": data["B"].mean(0),
+            "bv_bar": data["b"].mean(0), "q_bar": data["q"].mean(0),
+        }
+        return st, cb, consts
+
+    _PREPARERS[cache_key] = jax.jit(prep)
+    return _PREPARERS[cache_key]
+
+
+def prepare_trajectory(p: Dict[str, Any]):
+    """One point -> (Trajectories, phi-oracle constants).
+
+    The historical ``run_to_epsilon`` recipe — data and problem from
+    ``PRNGKey(seed)``, shared x0/y0, tracking corrections from the init
+    batch — as one jitted program shared by the sequential and batched
+    paths, so trajectory starts are bit-identical by construction.  The phi
+    constants are the client-mean coefficients the exact ∇Φ oracle needs
+    (the cell problem reads per-client slices from the batch and has no
+    global view).
+    """
+    p = _full_point(p)
+    st, cb, consts = _preparer(p)(
+        jnp.int32(p["seed"]), jnp.float32(p["heterogeneity"]),
+        jnp.float32(p["sigma"]))
+    kb = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (p["K"], *v.shape)), cb)
+    traj = batched_lib.Trajectories(
+        state=st, batches=kb, etas=point_etas(_cfg(p)),
+        seed=jnp.int32(p["seed"]), active=jnp.asarray(True))
+    return traj, consts
+
+
+def _phi_grad_norm(consts, x_clients, mu: float):
+    """Exact ‖∇Φ(x̄)‖ from the client-mean constants — the expression of
+    ``quadratic_problem.phi_grad`` + ``phi_grad_norm``, term for term."""
+    x = x_clients.mean(0)
+    ystar = (consts["b_bar"] @ x + consts["bv_bar"]) / mu
+    g = consts["a_bar"] @ x + consts["q_bar"] + consts["b_bar"].T @ ystar
+    return jnp.sqrt(jnp.sum(jnp.square(g)))
+
+
+def _cell_programs(p: Dict[str, Any], *, batched: bool, mesh=None,
+                   mesh_axis: str = batched_lib.CLIENTS):
+    """(chunk builder, eval fn) for a cell whose static parameters are
+    ``p``'s.  ``batched`` selects vmap-of-the-trajectory-program vs the
+    unbatched sequential reference — the *only* difference between the two
+    execution paths.
+
+    The ∇Φ convergence oracle is deliberately a single-trajectory program
+    on both paths: XLA's fusion of this small matvec chain is not
+    vmap-rounding-stable (an ulp here flips a ``g < eps`` stop decision
+    near the threshold), so the batched driver dispatches the same cached
+    executable per active trajectory at chunk boundaries instead of
+    vmapping it.  The scan chunk — where the round compute lives — stays
+    one dispatch for the whole batch, and *is* bit-stable under vmap
+    (held to that by tests/test_sweep.py).
+    """
+    noise = p["sigma"] > 0.0
+    problem = quadratic_cell_problem(DX, DY, mu=1.0, noise=noise)
+    round_step = make_round_step(problem, _cfg(p), traced_etas=True)
+    sampler = batched_lib.make_quadratic_traj_sampler(
+        local_steps=p["K"], num_clients=p["n"])
+    if batched:
+        build = batched_lib.make_batched_chunk_builder(
+            round_step, sampler, mesh=mesh, mesh_axis=mesh_axis)
+    else:
+        build = batched_lib.make_trajectory_chunk_builder(round_step, sampler)
+    eval_fn = jax.jit(lambda c, x: _phi_grad_norm(c, x, 1.0))
+    return build, eval_fn
+
+
+def _timed_eval(eval_fn):
+    """AOT-compile ``eval_fn`` on first use, reporting the compile seconds
+    (same split discipline as ``engine.timed_chunk_builder``)."""
+    holder: dict = {}
+
+    def call(*args):
+        if "fn" not in holder:
+            t0 = time.perf_counter()
+            try:
+                holder["fn"] = eval_fn.lower(*args).compile()
+            except Exception:
+                holder["fn"] = eval_fn
+            holder["compile_s"] = time.perf_counter() - t0
+        return holder["fn"](*args)
+
+    call.stats = holder
+    return call
+
+
+def run_point(p: Dict[str, Any]):
+    """Sequential reference: one point, engine-chunked scan per
+    ``eval_every`` interval, ∇Φ checked at chunk boundaries with immediate
+    stop — the execution `benchmarks.common.run_to_epsilon` delegates to.
+
+    Returns ``(rounds_to_eps or None, final ‖∇Φ‖, timing, history)`` where
+    ``timing = {"wall_s", "compile_s", "run_s"}`` splits XLA compilation
+    from steady-state execution and ``history`` is ``[(round, grad), …]``
+    on the evaluation grid.
+    """
+    p = _full_point(p)
+    t0 = time.perf_counter()
+    traj, consts = prepare_trajectory(p)
+    jax.block_until_ready(traj.state.x)
+    setup_s = time.perf_counter() - t0
+    build_raw, eval_raw = _cell_programs(p, batched=False)
+    build = engine_lib.timed_chunk_builder(build_raw)
+    eval_fn = _timed_eval(eval_raw)
+    hist: List[tuple] = []
+    hit = None
+    final_round = jnp.int32(p["max_rounds"] - 1)
+    r = 0
+    while r < p["max_rounds"]:
+        length = min(p["eval_every"], p["max_rounds"] - r)
+        traj, _ = build(length)(traj, final_round)
+        r += length
+        g = float(eval_fn(consts, traj.state.x))
+        hist.append((r, g))
+        if g < p["eps"]:
+            hit = r
+            break
+    final = hist[-1][1] if hist else float("nan")
+    wall = time.perf_counter() - t0
+    compile_s = build.stats["compile_s"] + eval_fn.stats.get("compile_s", 0.0)
+    timing = {"wall_s": wall, "compile_s": compile_s, "setup_s": setup_s,
+              "run_s": wall - compile_s - setup_s}
+    return hit, final, timing, hist
+
+
+def run_cell(cell: grid_lib.Cell, *, mesh=None,
+             mesh_axis: str = batched_lib.CLIENTS,
+             return_trajs: bool = False):
+    """One static cell as a batched program: returns
+    ``(per-point result dicts, timing)`` — with ``return_trajs``,
+    ``((results, timing), trajectories)`` including the final stacked
+    (frozen-where-converged) state.
+
+    Drives the same evaluation grid as :func:`run_point`: after each
+    ``eval_every`` chunk the batched ∇Φ oracle runs once for all B
+    trajectories, newly-converged ones record their hit round and drop out
+    of the ``active`` mask (their state freezes at this exact boundary),
+    and the loop exits early once every trajectory has converged.
+    """
+    points = [_full_point(p) for p in cell.points]
+    p0 = points[0]
+    for p in points[1:]:
+        bad = [k for k in STATIC_KEYS if p[k] != p0[k]]
+        if (p["sigma"] > 0.0) != (p0["sigma"] > 0.0):
+            bad.append("sigma>0")
+        if bad:
+            raise ValueError(
+                f"cell {cell.key!r} mixes static program parameters {bad}; "
+                "declare them as static axes (or give the sigma axis "
+                "cell_key=lambda s: s > 0)")
+
+    t0 = time.perf_counter()
+    prepared = [prepare_trajectory(p) for p in points]
+    trajs = batched_lib.tree_stack([tr for tr, _ in prepared])
+    consts = [c for _, c in prepared]  # per-trajectory, never stacked
+    jax.block_until_ready(trajs.state.x)
+    setup_s = time.perf_counter() - t0
+    if mesh is not None:
+        trajs = jax.device_put(trajs, batched_lib.batch_sharding(mesh, mesh_axis))
+    build_raw, eval_raw = _cell_programs(p0, batched=True, mesh=mesh,
+                                         mesh_axis=mesh_axis)
+    build = engine_lib.timed_chunk_builder(build_raw)
+    eval_fn = _timed_eval(eval_raw)
+
+    B = len(points)
+    active = np.ones(B, bool)
+    hit: List[Optional[int]] = [None] * B
+    hist: List[List[tuple]] = [[] for _ in range(B)]
+    final_round = jnp.int32(p0["max_rounds"] - 1)
+    r = 0
+    while r < p0["max_rounds"]:
+        length = min(p0["eval_every"], p0["max_rounds"] - r)
+        trajs, _ = build(length)(trajs, final_round)
+        r += length
+        # dispatch the oracle for every live trajectory, then sync once
+        g = {i: eval_fn(consts[i], trajs.state.x[i])
+             for i in range(B) if active[i]}
+        for i, gi in g.items():
+            gi = float(gi)
+            hist[i].append((r, gi))
+            if gi < points[i]["eps"]:
+                hit[i] = r
+                active[i] = False
+        if not active.any():
+            break
+        trajs = dataclasses.replace(trajs, active=jnp.asarray(active))
+
+    wall = time.perf_counter() - t0
+    compile_s = build.stats["compile_s"] + eval_fn.stats.get("compile_s", 0.0)
+    timing = {"wall_s": round(wall, 3), "compile_s": round(compile_s, 3),
+              "setup_s": round(setup_s, 3),
+              "run_s": round(wall - compile_s - setup_s, 3)}
+    results = [
+        {"rounds_to_eps": hit[i],
+         "final_grad": hist[i][-1][1] if hist[i] else float("nan"),
+         "history": hist[i]}
+        for i in range(B)
+    ]
+    if return_trajs:
+        return (results, timing), trajs
+    return results, timing
+
+
+def run_sweep(spec: grid_lib.GridSpec, *, mesh=None, store: bool = True,
+              store_dir: Optional[str] = None, csv=None) -> dict:
+    """Run every static cell of ``spec`` batched; persist and return
+    ``{"points": {point_key: {...}}, "cells": {cell_key: {...}}}``."""
+    out: dict = {"name": spec.name, "points": {}, "cells": {}}
+    for cell in spec.cells():
+        results, timing = run_cell(cell, mesh=mesh)
+        out["cells"][cell.key] = {
+            "static": cell.static, "num_trajectories": len(cell.points),
+            **timing}
+        if csv is not None:
+            csv(f"sweep,{spec.name},cell={cell.key},B={len(cell.points)},"
+                f"compile_s={timing['compile_s']},run_s={timing['run_s']}")
+        for p, res in zip(cell.points, results):
+            out["points"][grid_lib.point_key(p)] = {
+                "params": dict(p), "cell": cell.key, **res}
+    if store:
+        path = store_lib.save(spec.name, out, spec, directory=store_dir)
+        out["store_path"] = path
+    return out
+
+
+def points_where(result: dict, **params) -> List[dict]:
+    """Stored/returned points whose params match ``params`` (sweep order)."""
+    return [rec for rec in result["points"].values()
+            if all(rec["params"].get(k) == v for k, v in params.items())]
+
+
+def summarize(points: List[dict]) -> dict:
+    """mean±std over a replicate group (seeds): final grad + rounds-to-ε
+    over the converged subset, plus the hit rate."""
+    finals = [p["final_grad"] for p in points]
+    hits = [p["rounds_to_eps"] for p in points if p["rounds_to_eps"] is not None]
+    out = {
+        "num": len(points),
+        "final_grad_mean": float(np.mean(finals)) if finals else None,
+        "final_grad_std": float(np.std(finals)) if finals else None,
+        "hit_rate": len(hits) / len(points) if points else None,
+    }
+    if hits:
+        out["rounds_to_eps_mean"] = float(np.mean(hits))
+        out["rounds_to_eps_std"] = float(np.std(hits))
+    else:
+        out["rounds_to_eps_mean"] = None
+        out["rounds_to_eps_std"] = None
+    return out
+
+
+def main() -> None:
+    import argparse
+
+    from repro.sweep import defs
+
+    ap = argparse.ArgumentParser(
+        description="Run named experiment sweeps as batched compiled cells")
+    ap.add_argument("names", nargs="*", help="sweep names (see --list)")
+    ap.add_argument("--list", action="store_true", help="list known sweeps")
+    ap.add_argument("--out", default=None, help="store directory "
+                    "(default: <repo>/results/sweeps)")
+    args = ap.parse_args()
+    if args.list or not args.names:
+        for name, spec in sorted(defs.SWEEPS.items()):
+            cells = spec.cells()
+            npts = sum(len(c.points) for c in cells)
+            print(f"{name}: {npts} points in {len(cells)} cells")
+        return
+    for name in args.names:
+        spec = defs.SWEEPS[name]
+        t0 = time.perf_counter()
+        res = run_sweep(spec, store_dir=args.out, csv=print)
+        print(f"sweep,{name},points={len(res['points'])},"
+              f"cells={len(res['cells'])},wall_s={time.perf_counter()-t0:.1f},"
+              f"store={res.get('store_path')}")
+
+
+if __name__ == "__main__":
+    main()

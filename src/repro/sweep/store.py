@@ -1,0 +1,111 @@
+"""Persistence for sweep results: ``results/sweeps/<name>.json``.
+
+Same merge-don't-clobber contract as ``benchmarks/run.py``: a partial rerun
+(one cell in CI, a few added seeds) updates its own points and leaves the
+rest of the file intact.  Every save restamps ``provenance`` — grid
+description + config hash, compile vs run seconds, jax/device info, git
+commit, timestamp — so a stored figure is reproducible from the file alone.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+from typing import Any, Optional
+
+from repro.sweep import grid as grid_lib
+
+
+def repo_root() -> str:
+    """The checkout root (this file lives at src/repro/sweep/store.py)."""
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+
+
+def default_dir() -> str:
+    return os.path.join(repo_root(), "results", "sweeps")
+
+
+def git_commit() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=repo_root(),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def device_info() -> str:
+    import jax
+
+    d = jax.devices()[0]
+    kind = getattr(d, "device_kind", "") or ""
+    return f"{d.platform}:{kind}" if kind else d.platform
+
+
+def provenance(spec: Optional[grid_lib.GridSpec] = None, **extra) -> dict:
+    import jax
+
+    out = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "jax": jax.__version__,
+        "device": device_info(),
+        "git_commit": git_commit(),
+    }
+    if spec is not None:
+        gj = spec.to_json()
+        out["grid"] = gj
+        out["config_hash"] = grid_lib.config_hash(gj)
+    out.update(extra)
+    return out
+
+
+def _jsonable(obj: Any):
+    """numpy scalars/arrays -> plain python, recursively."""
+    import numpy as np
+
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
+def save(name: str, result: dict, spec: Optional[grid_lib.GridSpec] = None,
+         directory: Optional[str] = None) -> str:
+    """Merge ``result`` (``{"points": ..., "cells": ...}``) into the named
+    store file and return its path."""
+    directory = directory or default_dir()
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{name}.json")
+    merged: dict = {"name": name, "points": {}, "cells": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict):
+                merged["points"] = prev.get("points", {})
+                merged["cells"] = prev.get("cells", {})
+        except (OSError, ValueError):
+            pass
+    merged["points"].update(_jsonable(result.get("points", {})))
+    merged["cells"].update(_jsonable(result.get("cells", {})))
+    merged["provenance"] = _jsonable(provenance(spec))
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1, default=str)
+    return path
+
+
+def load(name: str, directory: Optional[str] = None) -> Optional[dict]:
+    path = os.path.join(directory or default_dir(), f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,404 @@
+"""Tests of the repro.sweep subsystem.
+
+The load-bearing claim mirrors the engine's: batching is an *execution
+model* change only.  Every cell of a grid run through ``sweep.batched``
+(one vmapped scan program per static cell) produces bit-identical
+trajectories, histories, and rounds-to-ε decisions to the corresponding
+single-trajectory sequential runs (``run_point``, what
+``benchmarks.common.run_to_epsilon`` delegates to), including the
+early-stop mask freezing a converged trajectory at exactly the boundary
+the sequential ``stop_fn`` would have stopped while the rest of the batch
+keeps scanning.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as engine_lib
+from repro.sweep import batched as batched_lib
+from repro.sweep import defs, grid
+from repro.sweep import run as sweep_run
+from repro.sweep import store as store_lib
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# grid: points, derive, static-cell partitioning
+# ---------------------------------------------------------------------------
+
+def test_points_order_and_derive():
+    spec = grid.GridSpec(
+        name="t", base=dict(sigma=1.0),
+        axes=(grid.static_axis("K", 1, 2), grid.batch_axis("seed", 0, 1)),
+        derive=lambda p: {"eta_cx": 0.02 / p["K"]},
+    )
+    pts = spec.points()
+    assert [(p["K"], p["seed"]) for p in pts] == [(1, 0), (1, 1), (2, 0), (2, 1)]
+    assert pts[0]["eta_cx"] == 0.02 and pts[2]["eta_cx"] == 0.01
+    assert all(p["sigma"] == 1.0 for p in pts)
+
+
+def test_cells_partition_static_and_cell_key():
+    spec = grid.GridSpec(
+        name="t",
+        axes=(grid.static_axis("algorithm", "kgt_minimax", "local_sgda"),
+              grid.batch_axis("sigma", 0.0, 0.5, 1.0,
+                              cell_key=lambda s: s > 0),
+              grid.batch_axis("seed", 0, 1)),
+    )
+    cells = spec.cells()
+    # 2 algorithms x {sigma==0, sigma>0} = 4 cells covering all 12 points
+    assert len(cells) == 4
+    assert sum(len(c.points) for c in cells) == 12
+    noisy = [c for c in cells if c.static["sigma"] is True]
+    assert all(len(c.points) == 4 for c in noisy)  # 2 sigmas x 2 seeds
+    for c in cells:
+        assert len({p["algorithm"] for p in c.points}) == 1
+        assert len({p["sigma"] > 0 for p in c.points}) == 1
+    # deterministic keys, order-stable points
+    assert cells[0].key == "algorithm=kgt_minimax,sigma=False"
+
+
+def test_run_cell_rejects_mixed_static_params():
+    spec = grid.GridSpec(
+        name="t", base=dict(max_rounds=10, eval_every=5),
+        axes=(grid.batch_axis("K", 1, 2),),  # K is NOT batchable
+    )
+    [cell] = spec.cells()
+    with pytest.raises(ValueError, match="static program parameters"):
+        sweep_run.run_cell(cell)
+
+
+def test_run_cell_rejects_sigma_span_without_cell_key():
+    spec = grid.GridSpec(
+        name="t", base=dict(max_rounds=10, eval_every=5),
+        axes=(grid.batch_axis("sigma", 0.0, 0.5),),
+    )
+    [cell] = spec.cells()
+    with pytest.raises(ValueError, match="sigma"):
+        sweep_run.run_cell(cell)
+
+
+def test_unknown_point_parameter_rejected():
+    with pytest.raises(ValueError, match="unknown point parameters"):
+        sweep_run.run_point({"nope": 1})
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-sequential bit-identity
+# ---------------------------------------------------------------------------
+
+def _assert_cells_bitmatch(spec):
+    """Every point of every cell: batched == sequential, bit for bit."""
+    for cell in spec.cells():
+        results, timing = sweep_run.run_cell(cell)
+        assert timing["run_s"] >= 0.0
+        for p, rec in zip(cell.points, results):
+            hit, final, _, hist = sweep_run.run_point(p)
+            ctx = grid.point_key(p)
+            assert rec["rounds_to_eps"] == hit, ctx
+            # exact float equality: same compiled trajectory program
+            assert rec["final_grad"] == final, ctx
+            assert rec["history"] == [(r, g) for r, g in hist], ctx
+
+
+def test_bitmatch_v2_style_grid():
+    # V2 shape: K static (changes the local-steps scan), seeds batched,
+    # noisy cell, eta derived 1/K — no early stop at this budget.
+    spec = grid.GridSpec(
+        name="t_v2",
+        base=dict(n=4, sigma=2.0, heterogeneity=1.0, eps=0.05, eta_s=0.5,
+                  max_rounds=30, eval_every=10),
+        axes=(grid.static_axis("K", 1, 2), grid.batch_axis("seed", 0, 1)),
+        derive=lambda p: {"eta_cx": 0.02 / p["K"], "eta_cy": 0.2 / p["K"]},
+    )
+    _assert_cells_bitmatch(spec)
+
+
+def test_bitmatch_v3_style_grid_noise_free():
+    # V3 shape: algorithm static (tracking vs not — different epilogues),
+    # heterogeneity rides the batch axis (it only shapes the data arrays),
+    # sigma == 0 covers the noise-free cell problem.
+    spec = grid.GridSpec(
+        name="t_v3",
+        base=dict(n=4, K=4, sigma=0.0, eps=0.05, eta_cx=0.01, eta_cy=0.1,
+                  max_rounds=30, eval_every=10),
+        axes=(grid.static_axis("algorithm", "kgt_minimax", "local_sgda"),
+              grid.batch_axis("heterogeneity", 0.0, 2.0)),
+        derive=lambda p: {
+            "eta_s": 0.5 if p["algorithm"] == "kgt_minimax" else 1.0},
+    )
+    _assert_cells_bitmatch(spec)
+
+
+def test_bitmatch_sigma_split_cells():
+    spec = grid.GridSpec(
+        name="t_sig",
+        base=dict(n=4, K=2, heterogeneity=1.0, eps=0.05, eta_cx=0.02,
+                  eta_cy=0.2, eta_s=0.5, max_rounds=20, eval_every=10),
+        axes=(grid.batch_axis("sigma", 0.0, 0.5, cell_key=lambda s: s > 0),
+              grid.batch_axis("seed", 0, 1)),
+    )
+    assert len(spec.cells()) == 2
+    _assert_cells_bitmatch(spec)
+
+
+def test_bitmatch_packed_mixing_cell():
+    # the pallas_packed whole-state epilogue under vmap + traced etas
+    spec = grid.GridSpec(
+        name="t_packed",
+        base=dict(n=4, K=2, sigma=0.3, heterogeneity=1.5, eps=0.05,
+                  eta_cx=0.02, eta_cy=0.2, eta_s=0.5, max_rounds=20,
+                  eval_every=10, mixing_impl="pallas_packed",
+                  topology="full"),
+        axes=(grid.batch_axis("seed", 0, 1),),
+    )
+    _assert_cells_bitmatch(spec)
+
+
+# ---------------------------------------------------------------------------
+# early stop: per-trajectory freeze
+# ---------------------------------------------------------------------------
+
+def _sequential_state_at_stop(p):
+    """Drive the sequential trajectory program to its stop round (the
+    run_point loop, keeping the state)."""
+    p = sweep_run._full_point(p)
+    traj, consts = sweep_run.prepare_trajectory(p)
+    build_raw, eval_raw = sweep_run._cell_programs(p, batched=False)
+    build = engine_lib.timed_chunk_builder(build_raw)
+    eval_fn = sweep_run._timed_eval(eval_raw)
+    final_round = jnp.int32(p["max_rounds"] - 1)
+    r = 0
+    while r < p["max_rounds"]:
+        length = min(p["eval_every"], p["max_rounds"] - r)
+        traj, _ = build(length)(traj, final_round)
+        r += length
+        if float(eval_fn(consts, traj.state.x)) < p["eps"]:
+            break
+    return traj.state, r
+
+
+def test_early_stop_freezes_at_sequential_round():
+    # eps chosen so trajectories converge at *different* boundaries and at
+    # least one runs to the budget: the freeze must pin each converged
+    # trajectory's state at its own stop round while the batch keeps going.
+    base = dict(n=4, K=4, sigma=0.0, eta_cx=0.02, eta_cy=0.2, eta_s=0.7,
+                max_rounds=60, eval_every=10, topology="full")
+    spec = grid.GridSpec(
+        name="t_stop", base=dict(base, eps=0.35),
+        axes=(grid.batch_axis("heterogeneity", 0.0, 1.0, 3.0),),
+    )
+    [cell] = spec.cells()
+    (results, timing), trajs = sweep_run.run_cell(cell, return_trajs=True)
+    hits = [r["rounds_to_eps"] for r in results]
+    assert len(set(hits)) > 1, (
+        f"tune eps: all trajectories stopped at the same boundary ({hits})")
+    for i, (p, rec) in enumerate(zip(cell.points, results)):
+        seq_state, seq_r = _sequential_state_at_stop(p)
+        expect_hit = seq_r if rec["rounds_to_eps"] is not None else None
+        assert rec["rounds_to_eps"] == expect_hit
+        # round leaf froze at the stop boundary...
+        assert int(batched_lib.tree_index(trajs.state, i).round) == seq_r
+        # ...and every state leaf matches the sequential stop state bitwise
+        for name in ("x", "y", "cx", "cy"):
+            a = np.asarray(getattr(seq_state, name))
+            b = np.asarray(getattr(batched_lib.tree_index(trajs.state, i), name))
+            np.testing.assert_array_equal(a, b, err_msg=f"traj {i} {name}")
+
+
+# ---------------------------------------------------------------------------
+# store: merge-don't-clobber + provenance
+# ---------------------------------------------------------------------------
+
+def test_store_merge_and_provenance(tmp_path):
+    d = str(tmp_path)
+    store_lib.save("t", {"points": {"a": {"final_grad": 1.0}},
+                         "cells": {"c1": {"B": 2}}}, directory=d)
+    store_lib.save("t", {"points": {"b": {"final_grad": np.float32(2.0)}},
+                         "cells": {}}, directory=d)
+    out = store_lib.load("t", directory=d)
+    assert set(out["points"]) == {"a", "b"}
+    assert out["cells"]["c1"]["B"] == 2
+    assert isinstance(out["points"]["b"]["final_grad"], float)
+    prov = out["provenance"]
+    for key in ("timestamp", "jax", "device", "git_commit"):
+        assert key in prov
+    # spec provenance carries the grid + its hash
+    spec = defs.SWEEPS["smoke"]
+    store_lib.save("t", {"points": {}, "cells": {}}, spec, directory=d)
+    prov = store_lib.load("t", directory=d)["provenance"]
+    assert prov["grid"]["name"] == "smoke"
+    assert len(prov["config_hash"]) == 12
+
+
+def test_run_sweep_persists_and_merges(tmp_path):
+    spec = grid.GridSpec(
+        name="t_tiny",
+        base=dict(n=4, K=2, sigma=0.5, heterogeneity=1.0, eps=0.5,
+                  eta_cx=0.02, eta_cy=0.2, eta_s=0.5, max_rounds=10,
+                  eval_every=5),
+        axes=(grid.batch_axis("seed", 0, 1),),
+    )
+    out = sweep_run.run_sweep(spec, store_dir=str(tmp_path))
+    stored = store_lib.load("t_tiny", directory=str(tmp_path))
+    assert set(stored["points"]) == set(out["points"])
+    rec = next(iter(stored["points"].values()))
+    assert {"params", "cell", "rounds_to_eps", "final_grad",
+            "history"} <= set(rec)
+    # second run with an extra seed merges, keeps the old points
+    spec2 = grid.GridSpec(name="t_tiny", base=spec.base,
+                          axes=(grid.batch_axis("seed", 2),))
+    sweep_run.run_sweep(spec2, store_dir=str(tmp_path))
+    stored = store_lib.load("t_tiny", directory=str(tmp_path))
+    assert len(stored["points"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# timing split (satellite): run_point / engine.run stamps
+# ---------------------------------------------------------------------------
+
+def test_run_point_timing_split():
+    hit, final, timing, hist = sweep_run.run_point(
+        dict(n=4, K=2, sigma=0.5, max_rounds=10, eval_every=5, eps=0.0))
+    assert set(timing) == {"wall_s", "compile_s", "setup_s", "run_s"}
+    assert timing["compile_s"] > 0.0
+    assert timing["run_s"] >= 0.0
+    assert timing["wall_s"] == pytest.approx(
+        timing["compile_s"] + timing["setup_s"] + timing["run_s"], abs=1e-6)
+    assert hist[-1][0] == 10 and hit is None
+
+
+def test_timed_chunk_builder_splits_compile():
+    calls = []
+
+    def fake_build(length):
+        return jax.jit(lambda s, f: (s + length, None))
+
+    build = engine_lib.timed_chunk_builder(fake_build)
+    fn = build(3)
+    out, _ = fn(jnp.float32(1.0), jnp.int32(0))
+    c1 = build.stats["compile_s"]
+    assert c1 > 0.0
+    out, _ = fn(out, jnp.int32(0))
+    assert build.stats["compile_s"] == c1  # steady state: no recompiles
+    assert float(out) == 7.0
+    assert build(3) is fn  # per-length cache
+
+
+def test_engine_run_records_carry_split_stamps():
+    metrics = lambda st, b: {"v": jnp.float32(0.0)}
+    sampler = lambda r: (jnp.zeros(()), jnp.zeros((2,), jnp.uint32))
+
+    import dataclasses as dc
+
+    @jax.tree_util.register_dataclass
+    @dc.dataclass
+    class S:
+        round: jnp.ndarray
+
+    step = lambda st, b, k: S(round=st.round + 1)
+    build = engine_lib.make_chunk_builder(step, sampler, metrics, donate=False)
+    state, history = engine_lib.run(
+        S(round=jnp.int32(0)), build, total_rounds=4, chunk_rounds=2)
+    assert len(history) == 4
+    for rec in history:
+        assert {"wall_s", "compile_s", "run_s"} <= set(rec)
+        assert rec["run_s"] <= rec["wall_s"]
+    # a second run with the SAME builder reuses the compiled chunks: no
+    # recompilation billed to it, and run_s stays non-negative
+    state, history = engine_lib.run(
+        state, build, total_rounds=8, chunk_rounds=2)
+    for rec in history:
+        assert rec["compile_s"] == 0.0
+        assert rec["run_s"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# defs sanity + benchmark row helpers
+# ---------------------------------------------------------------------------
+
+def test_paper_sweep_defs_partition_as_documented():
+    expected_cells = {
+        "local_steps": 5,      # K static
+        "heterogeneity": 2,    # algorithm static; het+seed batched
+        "topology": 4,
+        "speedup": 4,          # n static
+        "convergence": 4,      # algorithm static, 8 seeds batched
+        "smoke": 1,
+    }
+    for name, n_cells in expected_cells.items():
+        spec = defs.SWEEPS[name]
+        cells = spec.cells()
+        assert len(cells) == n_cells, name
+        # every cell passes the static-uniformity validation
+        for cell in cells:
+            pts = [sweep_run._full_point(p) for p in cell.points]
+            for k in sweep_run.STATIC_KEYS:
+                assert len({p[k] for p in pts}) == 1, (name, cell.key, k)
+    assert len(defs.SWEEPS["convergence"].points()) == 32
+
+
+def test_replicate_row_helpers():
+    from benchmarks.common import replicate_row, seed0_point
+
+    result = {"points": {
+        "a": {"params": {"K": 1, "seed": 0}, "rounds_to_eps": 10,
+              "final_grad": 0.5},
+        "b": {"params": {"K": 1, "seed": 1}, "rounds_to_eps": None,
+              "final_grad": 0.7},
+        "c": {"params": {"K": 2, "seed": 0}, "rounds_to_eps": 20,
+              "final_grad": 0.1},
+    }}
+    assert seed0_point(result, K=2)["rounds_to_eps"] == 20
+    row = replicate_row(result, K=1)
+    assert row["rounds_to_eps"] == 10 and row["num"] == 2
+    assert row["final_grad_mean"] == pytest.approx(0.6)
+    assert row["hit_rate"] == 0.5
+    assert row["rounds_to_eps_mean"] == 10.0
+
+
+# ---------------------------------------------------------------------------
+# batch-axis GSPMD sharding (subprocess: XLA flag must precede jax init)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.launch import mesh as mesh_lib
+from repro.sweep import grid
+from repro.sweep import run as sweep_run
+
+mesh = mesh_lib.fake_mesh(2, 2, 1)
+spec = grid.GridSpec(
+    name="t_mesh",
+    base=dict(n=4, K=2, sigma=0.5, heterogeneity=1.0, eps=0.0,
+              eta_cx=0.02, eta_cy=0.2, eta_s=0.5, max_rounds=10,
+              eval_every=5),
+    axes=(grid.batch_axis("seed", 0, 1, 2, 3),),
+)
+[cell] = spec.cells()
+sharded, _ = sweep_run.run_cell(cell, mesh=mesh)
+plain, _ = sweep_run.run_cell(cell)
+for a, b in zip(sharded, plain):
+    assert a["history"] == b["history"], (a, b)
+print("MESH_SWEEP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_batch_axis_sharded_cell_matches_unsharded():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    assert "MESH_SWEEP_OK" in proc.stdout
