@@ -16,6 +16,7 @@ import sys
 import time
 
 from benchmarks import (
+    bench_churn,
     bench_convergence,
     bench_engine,
     bench_gossip,
@@ -36,6 +37,7 @@ BENCHES = {
     "heterogeneity": bench_heterogeneity.run,  # V3: DH robustness
     "topology": bench_topology.run,            # V4: T vs p
     "speedup": bench_speedup.run,              # V5: linear speedup in n
+    "churn": bench_churn.run,                  # V6: random topologies + participation
     "gossip": bench_gossip.run,                # round-epilogue lowerings
     "engine": bench_engine.run,                # host loop vs scanned chunks
     "sweep": bench_sweep.run,                  # sequential loop vs vmapped cell

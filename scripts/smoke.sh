@@ -29,6 +29,25 @@ echo "== pytest collection =="
 python -m pytest -q --collect-only > /dev/null
 echo "collection ok"
 
+echo "== property suite (must collect and pass with 0 skips) =="
+# CI path: install the [dev] extra's hypothesis; offline the suite still
+# runs — and must still fully pass — on the bundled fallback
+# (repro.testing.minihypothesis via tests/_hyp.py).
+if ! python -c "import hypothesis" 2>/dev/null; then
+    pip install --quiet hypothesis 2>/dev/null \
+        || echo "[smoke] offline: property tests run on the bundled fallback"
+fi
+prop_summary=$(python -m pytest -q tests/test_property.py | tail -n 1)
+echo "property suite: ${prop_summary}"
+# pytest exits 5 (collected nothing) or 1 (failures) above; these guards
+# additionally fail the smoke on skips sneaking back in
+if ! echo "${prop_summary}" | grep -q "passed"; then
+    echo "FAIL: property suite collected zero hypothesis tests"; exit 1
+fi
+if echo "${prop_summary}" | grep -q "skipped"; then
+    echo "FAIL: property suite must run with zero skips"; exit 1
+fi
+
 echo "== step programs compile on fake CPU mesh =="
 python -m repro.launch.smoke "$@"
 

@@ -216,6 +216,15 @@ class AlgorithmConfig:
     # (e.g. ("ring", "exp")); empty = static cfg.topology.  Covered by the
     # changing-topology analysis of [KLB+20] the paper builds on.
     topology_cycle: Tuple[str, ...] = ()
+    # --- stochastic topologies + partial participation (beyond-paper churn
+    # axes, repro.core.stochastic_topology).  The family is a static program
+    # property; the rates are traced scalars.  "static" + participation_rate
+    # 1.0 = the paper's fixed-W/full-participation setting.
+    topology_family: str = "static"   # static | erdos_renyi | pairwise | dropout
+    edge_prob: float = 0.5            # erdos_renyi: P[link present] per round
+    client_drop_prob: float = 0.3     # dropout family: P[client drops links]
+    participation_rate: float = 1.0   # < 1: per-round Bernoulli client mask
+    topology_seed: int = 0            # seeds the W/mask sampling streams
 
 
 # ---------------------------------------------------------------------------

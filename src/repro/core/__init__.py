@@ -22,4 +22,14 @@ from repro.core.objectives import (  # noqa: F401
     quadratic_cell_problem,
     quadratic_problem,
 )
+from repro.core.stochastic_topology import (  # noqa: F401
+    TOPOLOGY_FAMILIES,
+    bernoulli_mask,
+    erdos_renyi_w,
+    make_participation_sampler,
+    make_w_sampler,
+    masked_w,
+    metropolis_weights,
+    pairwise_w,
+)
 from repro.core.topology import mixing_matrix, spectral_gap  # noqa: F401

@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.base import AlgorithmConfig
 from repro.core import mixing as mixing_lib
 from repro.core import packing
+from repro.core import stochastic_topology as stoch_lib
 from repro.core import topology as topo_lib
 from repro.core.minimax import MinimaxProblem
 from repro.kernels import ops as kernel_ops
@@ -64,6 +65,39 @@ def _tree_scale(a: float, tree):
 
 def _replicate(tree, n: int):
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), tree)
+
+
+def _client_broadcast(mask, ndim: int):
+    """(n,) mask -> (n, 1, …, 1) for broadcasting against an (n, …) leaf."""
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))
+
+
+def _tree_mask_clients(mask, tree):
+    """Zero the leaves of inactive clients (mask 0).  ×1.0 in f32 is exact,
+    so active clients' values are bit-unchanged."""
+    def one(x):
+        m = _client_broadcast(mask.astype(jnp.float32), x.ndim)
+        return (x.astype(jnp.float32) * m).astype(x.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def _freeze_inactive(mask, new_state: "KGTState", old_state: "KGTState"):
+    """Per-client select: active clients take the round's result, inactive
+    clients keep (θ, c) bit-exactly.  The masked Δ and self-loop W already
+    make the inactive rows no-ops mathematically; the where pins them
+    bit-exactly regardless of float summation order."""
+    def pick(new, old):
+        return jax.tree.map(
+            lambda a, b: jnp.where(_client_broadcast(mask, a.ndim), a, b),
+            new, old)
+
+    return KGTState(
+        x=pick(new_state.x, old_state.x),
+        y=pick(new_state.y, old_state.y),
+        cx=pick(new_state.cx, old_state.cx),
+        cy=pick(new_state.cy, old_state.cy),
+        round=new_state.round)
 
 
 def init_state(
@@ -127,6 +161,8 @@ def make_round_step(
     lr_scale: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
     *,
     traced_etas: bool = False,
+    traced_w: bool = False,
+    participation: bool = False,
 ):
     """Builds round_step(state, batches, keys) -> state.
 
@@ -140,6 +176,19 @@ def make_round_step(
     ``repro.sweep`` vmap one compiled program over trajectories that differ
     only in their stepsizes.  The stepsizes in ``cfg`` are ignored on that
     path; compose any schedule into the eta values instead of ``lr_scale``.
+
+    ``traced_w=True`` appends an ``(n, n)`` mixing matrix to the signature:
+    W becomes a traced operand of the round — alongside the eta bundle on
+    the sweep path — instead of a constant baked into the program, which is
+    what lets a per-round *random* topology (``repro.core
+    .stochastic_topology``) ride the engine's sampler slot.  ``participation
+    =True`` appends an ``(n,)`` per-round client mask: inactive clients run
+    no effective local update (their Δ is zeroed), drop every gossip link
+    (self-loop fallback, :func:`stochastic_topology.masked_w` applied to
+    whatever W the round uses), and their (θ, c) freeze bit-exactly; the
+    Σ_i c_i = 0 tracking invariant holds under any mask because the masked
+    W stays doubly stochastic.  Extras order: ``round_step(state, batches,
+    keys[, etas][, w][, mask])``.
     """
     if traced_etas and lr_scale is not None:
         raise ValueError(
@@ -154,9 +203,19 @@ def make_round_step(
         raise ValueError(
             f"mixing_impl={cfg.mixing_impl!r} is not supported with "
             "topology_cycle; use 'dense', 'fused_dense', or 'pallas_packed'")
+    if traced_w and cfg.topology_cycle:
+        raise ValueError(
+            "traced_w supplies W per round; topology_cycle would fight it — "
+            "drop the cycle (sample the W sequence instead) or traced_w")
+    dynamic_w = traced_w or participation
     packed = cfg.mixing_impl == "pallas_packed"
     pack_gd = (None if cfg.gossip_dtype in (None, "float32")
                else jnp.dtype(cfg.gossip_dtype))
+    if dynamic_w and not packed:
+        # validates the impl (ring-style neighbor exchanges cannot realize a
+        # per-round arbitrary W) and gives us mix(tree, w) with w traced
+        traced_mix = mixing_lib.make_traced_mixer(
+            cfg.mixing_impl, cfg.gossip_dtype)
     if cfg.topology_cycle:
         # time-varying gossip: W selected per round from the cycle
         ws = jnp.stack([
@@ -169,12 +228,12 @@ def make_round_step(
             w_t = get_w(round_idx)
             return lambda tree: mixing_lib.mix_dense(tree, w_t, gossip_dtype=gd)
     else:
-        if w is None:
+        if w is None and not traced_w:
             w = topo_lib.mixing_matrix(cfg.topology, cfg.num_clients)
-        w_arr = jnp.asarray(w, jnp.float32)
+        w_arr = None if w is None else jnp.asarray(w, jnp.float32)
         get_w = lambda round_idx: w_arr
-        if packed:
-            make_mix = None  # the packed epilogue consumes W directly
+        if packed or dynamic_w:
+            make_mix = None  # W is consumed directly, per round
         else:
             static_mix = mixing_lib.make_mixer(
                 cfg.topology, cfg.mixing_impl, w, cfg.gossip_dtype)
@@ -186,8 +245,17 @@ def make_round_step(
     grads_v = jax.vmap(problem.grads)
 
     def _round(state: KGTState, batches, keys,
-               eta_cx, eta_cy, eta_sx, eta_sy, corr_x, corr_y) -> KGTState:
-        mix = None if packed else make_mix(state.round)
+               eta_cx, eta_cy, eta_sx, eta_sy, corr_x, corr_y,
+               w_t=None, mask=None) -> KGTState:
+        if packed or dynamic_w:
+            if w_t is None:
+                w_t = get_w(state.round)
+            if mask is not None:
+                w_t = stoch_lib.masked_w(w_t, mask)
+            mix = (None if packed
+                   else (lambda tree: traced_mix(tree, w_t)))
+        else:
+            mix = make_mix(state.round)
 
         def local_step(carry, inp):
             xx, yy = carry
@@ -206,6 +274,12 @@ def make_round_step(
 
         dx = _tree_sub(xk, state.x)   # Δx = x^{(t)+K} − x^{(t)}
         dy = _tree_sub(yk, state.y)
+        if mask is not None:
+            # inactive clients contribute no local update: with Δ_i = 0 and
+            # W row/col i = e_i (masked_w above), lines 7-11 are no-ops for
+            # them and their mass never reaches active clients
+            dx = _tree_mask_clients(mask, dx)
+            dy = _tree_mask_clients(mask, dy)
 
         if packed:
             # Whole-state lowering: ravel each variable into one (n, D)
@@ -213,7 +287,6 @@ def make_round_step(
             # fused pass — θ_new = Wθ + η_s·WΔ and c += ±(Δ − WΔ)/(K·η_c)
             # computed together, one collective per variable instead of one
             # (or two) per leaf.  See repro.kernels.{gossip,ops}.
-            w_t = get_w(state.round)
             spec_x = packing.pack_spec(state.x)
             spec_y = packing.pack_spec(state.y)
             if not track:
@@ -227,9 +300,11 @@ def make_round_step(
                 yb = mixing_lib.mix_dense(
                     packing.pack(state.y, spec_y)
                     + eta_sy * packing.pack(dy, spec_y), w_t, gossip_dtype=pack_gd)
-                return KGTState(
+                new_state = KGTState(
                     x=packing.unpack(xb, spec_x), y=packing.unpack(yb, spec_y),
                     cx=state.cx, cy=state.cy, round=state.round + 1)
+                return (new_state if mask is None
+                        else _freeze_inactive(mask, new_state, state))
             spec_cx = packing.pack_spec(state.cx)
             spec_cy = packing.pack_spec(state.cy)
             xb, cxb = kernel_ops.fused_gossip_round(
@@ -240,12 +315,14 @@ def make_round_step(
                 w_t, packing.pack(dy, spec_y), packing.pack(state.y, spec_y),
                 packing.pack(state.cy, spec_cy), eta_sy, corr_y,
                 backend=gossip_backend, gossip_dtype=cfg.gossip_dtype)
-            return KGTState(
+            new_state = KGTState(
                 x=packing.unpack(xb, spec_x),
                 y=packing.unpack(yb, spec_y),
                 cx=packing.unpack(cxb, spec_cx),
                 cy=packing.unpack(cyb, spec_cy),
                 round=state.round + 1)
+            return (new_state if mask is None
+                    else _freeze_inactive(mask, new_state, state))
 
         # Algorithm 1 communicates two quantities per variable per round:
         # Δ (lines 7-8) and the parameters (lines 10-11).  The faithful
@@ -280,10 +357,31 @@ def make_round_step(
         x_new = _tree_axpy(eta_sx, mdx, mx)
         y_new = _tree_axpy(eta_sy, mdy, my)
 
-        return KGTState(x=x_new, y=y_new, cx=cx, cy=cy, round=state.round + 1)
+        new_state = KGTState(x=x_new, y=y_new, cx=cx, cy=cy,
+                             round=state.round + 1)
+        return (new_state if mask is None
+                else _freeze_inactive(mask, new_state, state))
+
+    n_extras = int(traced_w) + int(participation)
+    extras_doc = "".join(
+        f"[{name}]" for name, on in (("w", traced_w), ("mask", participation))
+        if on)
+
+    def _split_extras(extras):
+        if len(extras) != n_extras:
+            raise TypeError(
+                f"round_step expected {n_extras} extra operand(s) "
+                f"{extras_doc or '(none)'} after keys"
+                f"{' and etas' if traced_etas else ''}, got {len(extras)}")
+        it = iter(extras)
+        w_t = next(it) if traced_w else None
+        mask = next(it) if participation else None
+        return w_t, mask
 
     if traced_etas:
-        def round_step(state: KGTState, batches, keys, etas) -> KGTState:
+        def round_step(state: KGTState, batches, keys, etas,
+                       *extras) -> KGTState:
+            w_t, mask = _split_extras(extras)
             # η_s = 1 for the no-tracking baselines (plain parameter
             # averaging), exactly like the static path below
             esx = etas["eta_sx"] if track else 1.0
@@ -291,7 +389,8 @@ def make_round_step(
             return _round(state, batches, keys, etas["eta_cx"], etas["eta_cy"],
                           esx, esy,
                           etas["corr_x"] if track else None,
-                          etas["corr_y"] if track else None)
+                          etas["corr_y"] if track else None,
+                          w_t=w_t, mask=mask)
 
         return round_step
 
@@ -300,14 +399,15 @@ def make_round_step(
     eta_sx = cfg.eta_sx if track else 1.0
     eta_sy = cfg.eta_sy if track else 1.0
 
-    def round_step(state: KGTState, batches, keys) -> KGTState:
+    def round_step(state: KGTState, batches, keys, *extras) -> KGTState:
+        w_t, mask = _split_extras(extras)
         scale = lr_scale(state.round) if lr_scale is not None else 1.0
         eta_cx = cfg.eta_cx * scale
         eta_cy = cfg.eta_cy * scale
         corr_x = 1.0 / (k_steps * eta_cx) if track else None
         corr_y = -1.0 / (k_steps * eta_cy) if track else None
         return _round(state, batches, keys, eta_cx, eta_cy, eta_sx, eta_sy,
-                      corr_x, corr_y)
+                      corr_x, corr_y, w_t=w_t, mask=mask)
 
     return round_step
 

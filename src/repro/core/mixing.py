@@ -114,6 +114,30 @@ def make_mixer(topology: str, impl: str, w: np.ndarray, gossip_dtype: str = "flo
     return lambda tree: mix_dense(tree, w, gossip_dtype=gd)
 
 
+def make_traced_mixer(impl: str, gossip_dtype: str = "float32"):
+    """Traced-W analogue of :func:`make_mixer`: returns ``mix(tree, w)``
+    where W is an operand of the surrounding jit — a per-round *sampled*
+    matrix (``repro.core.stochastic_topology``) or a participation-masked
+    one — instead of a constant baked into the program.
+
+    The neighbor-only ring impls hard-code the exchange pattern and cannot
+    realize an arbitrary per-round W, so they raise; ``dense``/``fused_dense``
+    lower to the dense einsum and ``pallas_packed`` to the packed tree
+    contraction, both of which already take W as a runtime value.
+    """
+    if impl not in MIXING_IMPLS:
+        raise ValueError(f"unknown mixing_impl {impl!r}: {MIXING_IMPLS}")
+    if impl.endswith("ring"):
+        raise ValueError(
+            f"mixing_impl={impl!r} is a neighbor-only exchange and cannot "
+            "realize a traced (per-round random or participation-masked) W; "
+            "use 'dense', 'fused_dense', or 'pallas_packed'")
+    gd = None if gossip_dtype in (None, "float32") else jnp.dtype(gossip_dtype)
+    if impl == "pallas_packed":
+        return lambda tree, w: mix_packed(tree, w, gossip_dtype=gd)
+    return lambda tree, w: mix_dense(tree, w, gossip_dtype=gd)
+
+
 def consensus_error(tree: Any) -> jnp.ndarray:
     """(1/n) Σ_i ||T_i - mean_j T_j||² summed over leaves (client variance Ξ)."""
     def one(x):

@@ -1,0 +1,177 @@
+"""Time-varying random topologies and partial client participation.
+
+The paper analyzes K-GT-Minimax on a *fixed* gossip matrix with every
+client active every round; the decentralized-FL settings it targets are
+defined by churn — links come and go, clients drop out.  This module opens
+both axes as **on-device per-round samplers**: pure-jnp functions of the
+round index that draw this round's mixing matrix W (and/or a participation
+mask) *inside* the scanned chunk, on the same ``fold_in`` key discipline as
+the data sampler (`repro.engine.sampler`), so a checkpoint restored at
+round r regenerates the identical W/mask sequence bit-for-bit.
+
+Topology families (:data:`TOPOLOGY_FAMILIES`):
+
+* ``static`` — the configured ``cfg.topology`` matrix every round (the
+  degenerate member, so churn-aware call sites need no special case);
+* ``erdos_renyi`` — G(n, p): each undirected edge present independently
+  with probability ``edge_prob``, Metropolis–Hastings weights on the drawn
+  graph (:func:`metropolis_weights`, the traceable analogue of
+  ``topology.metropolis``);
+* ``pairwise`` — randomized gossip: one uniformly random pair averages,
+  everyone else holds (W = I − ½(e_i−e_j)(e_i−e_j)ᵀ);
+* ``dropout`` — per-client Bernoulli dropout of the configured base
+  topology with self-loop fallback (:func:`masked_w`).
+
+Every sampled W is symmetric doubly stochastic by construction — exactly
+Assumption 4 minus the fixed spectral gap — so the two invariants the test
+suite holds every round step to (client-mean dynamics independent of W,
+Σ_i c_i = 0) carry over to arbitrary drawn sequences.
+
+:func:`masked_w` is also the participation primitive: inactive clients'
+rows/columns collapse to e_i (they neither send nor receive; the lost
+off-diagonal mass folds into each *partner's* diagonal), which is what lets
+``make_round_step(participation=True)`` freeze (θ, c) of inactive clients
+while active clients keep mixing — and keeps W' doubly stochastic, hence
+Σc = 0, under ANY mask.
+
+``edge_prob`` / ``client_drop_prob`` / ``rate`` may be traced scalars —
+``repro.sweep`` batches them as grid axes — while the family itself is a
+static program property (a cell split).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TOPOLOGY_FAMILIES = ("static", "erdos_renyi", "pairwise", "dropout")
+
+# fold_in stream ids separating the W draw from the participation-mask draw
+# (the data sampler's streams are the raw per-round key and 999; these are
+# disjoint by construction since they fold a second constant).
+W_STREAM = 1717
+MASK_STREAM = 2929
+
+
+def round_stream_key(key, round_idx, stream: int):
+    """Per-(round, stream) PRNG key: ``fold_in(fold_in(key, round), stream)``.
+
+    The same discipline as ``engine.sampler.make_dro_sampler`` — every draw
+    is a pure function of (seed key, round index, stream id), which is what
+    makes checkpoint restore resume the exact W/mask sequence.
+    """
+    return jax.random.fold_in(jax.random.fold_in(key, round_idx), stream)
+
+
+def metropolis_weights(adj) -> jnp.ndarray:
+    """Metropolis–Hastings weights for a symmetric (n, n) adjacency.
+
+    w_ij = 1/(1 + max(d_i, d_j)) on edges, diagonal takes the leftover
+    mass — symmetric doubly stochastic for any symmetric adjacency,
+    including empty or disconnected graphs (isolated nodes get w_ii = 1).
+    Traceable analogue of ``topology.metropolis`` (that one is host-side
+    numpy with Python loops).
+    """
+    adj = adj.astype(jnp.float32)
+    n = adj.shape[0]
+    adj = adj * (1.0 - jnp.eye(n, dtype=jnp.float32))
+    deg = adj.sum(1)
+    w = adj / (1.0 + jnp.maximum(deg[:, None], deg[None, :]))
+    return w + jnp.diag(1.0 - w.sum(1))
+
+
+def erdos_renyi_w(key, n: int, edge_prob) -> jnp.ndarray:
+    """One G(n, edge_prob) draw -> MH-weighted mixing matrix.
+
+    ``edge_prob`` may be traced (uniform-threshold sampling).
+    """
+    u = jax.random.uniform(key, (n, n))
+    upper = jnp.triu(u < edge_prob, k=1)
+    return metropolis_weights(upper | upper.T)
+
+
+def pairwise_w(key, n: int) -> jnp.ndarray:
+    """Randomized pairwise gossip: W = I − ½(e_i−e_j)(e_i−e_j)ᵀ for one
+    uniformly random pair i ≠ j; degenerates to I for n < 2."""
+    if n < 2:
+        return jnp.eye(max(n, 1), dtype=jnp.float32)
+    ki, kj = jax.random.split(key)
+    i = jax.random.randint(ki, (), 0, n)
+    j = jax.random.randint(kj, (), 0, n - 1)
+    j = j + (j >= i).astype(j.dtype)
+    d = (jax.nn.one_hot(i, n, dtype=jnp.float32)
+         - jax.nn.one_hot(j, n, dtype=jnp.float32))
+    return jnp.eye(n, dtype=jnp.float32) - 0.5 * jnp.outer(d, d)
+
+
+def masked_w(w, mask) -> jnp.ndarray:
+    """Self-loop fallback: W′_ij = W_ij·m_i·m_j off-diagonal, each diagonal
+    absorbs its row's lost mass (W′_ii = 1 − Σ_{j≠i} W′_ij).
+
+    For any 0/1 mask this keeps W′ symmetric, nonnegative, and doubly
+    stochastic, and collapses a masked-out client's row/column to e_i — it
+    neither sends nor receives, so (W′θ)_i = θ_i and (W′Δ)_i = Δ_i exactly.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    n = w.shape[0]
+    m = mask.astype(jnp.float32)
+    off = w * (1.0 - jnp.eye(n, dtype=jnp.float32)) * m[:, None] * m[None, :]
+    return off + jnp.diag(1.0 - off.sum(1))
+
+
+def bernoulli_mask(key, n: int, rate) -> jnp.ndarray:
+    """(n,) bool mask, P[active] = rate (traced ok; rate ≥ 1 → all active)."""
+    return jax.random.uniform(key, (n,)) < rate
+
+
+def make_w_sampler(
+    family: str,
+    n: int,
+    key,
+    *,
+    base_w: Optional[np.ndarray] = None,
+    edge_prob=0.5,
+    client_drop_prob=0.3,
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """``w_fn(round_idx) -> (n, n) f32 W``: this round's mixing matrix.
+
+    Pure and jit-traceable under a traced ``round_idx`` — the engine calls
+    it inside the scanned chunk (sampler slot, see
+    ``engine.sampler.with_topology``); ``repro.sweep`` calls it with
+    per-trajectory traced ``edge_prob``/``client_drop_prob`` scalars.
+    ``base_w`` is required for the ``static`` and ``dropout`` families (the
+    matrix churn is applied to).
+    """
+    if family not in TOPOLOGY_FAMILIES:
+        raise ValueError(
+            f"unknown topology family {family!r}: {TOPOLOGY_FAMILIES}")
+    if family in ("static", "dropout"):
+        if base_w is None:
+            raise ValueError(f"topology family {family!r} needs base_w")
+        w0 = jnp.asarray(base_w, jnp.float32)
+    if family == "static":
+        return lambda round_idx: w0
+    if family == "erdos_renyi":
+        return lambda r: erdos_renyi_w(
+            round_stream_key(key, r, W_STREAM), n, edge_prob)
+    if family == "pairwise":
+        return lambda r: pairwise_w(round_stream_key(key, r, W_STREAM), n)
+
+    def sample_dropout(r):
+        keep = bernoulli_mask(
+            round_stream_key(key, r, W_STREAM), n, 1.0 - client_drop_prob)
+        return masked_w(w0, keep)
+
+    return sample_dropout
+
+
+def make_participation_sampler(
+    n: int, key, rate
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """``mask_fn(round_idx) -> (n,) bool`` per-round participation mask,
+    drawn on the MASK_STREAM so it is independent of the same round's W
+    draw.  ``rate`` may be traced (a sweep axis)."""
+    return lambda r: bernoulli_mask(
+        round_stream_key(key, r, MASK_STREAM), n, rate)

@@ -12,6 +12,7 @@ from repro.engine.engine import (  # noqa: F401
     records_from_buffer,
     row_to_record,
     run,
+    split_sampled,
     timed_chunk_builder,
 )
 from repro.engine.diagnostics import (  # noqa: F401
@@ -22,4 +23,5 @@ from repro.engine.sampler import (  # noqa: F401
     held_out_eval_batch,
     make_dro_sampler,
     make_fixed_batch_sampler,
+    with_topology,
 )

@@ -40,9 +40,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-Sampler = Callable[[jnp.ndarray], Tuple[Any, jnp.ndarray]]
+# (round_idx) -> (batches, keys) or (batches, keys, extras): a sampler may
+# return a third element — a tuple of per-round traced operands (a sampled
+# mixing matrix W, a participation mask; see sampler.with_topology) that the
+# chunk body splats into round_step(state, batches, keys, *extras).
+Sampler = Callable[[jnp.ndarray], Tuple[Any, ...]]
 MetricsFn = Callable[[Any, Any], Dict[str, jnp.ndarray]]
 Hook = Callable[[Any, List[dict], int], None]  # (state, records, prev_round)
+
+
+def split_sampled(sampled) -> Tuple[Any, Any, Tuple[Any, ...]]:
+    """One sampler return -> ``(batches, keys, extras)`` per the Sampler
+    protocol above.  Every consumer of a sampler (the scanned chunk body,
+    the host A/B loops) goes through this so the two execution paths can't
+    drift on the protocol."""
+    batches, keys = sampled[0], sampled[1]
+    extras = tuple(sampled[2]) if len(sampled) > 2 else ()
+    return batches, keys, extras
 
 
 def chunk_program(
@@ -65,8 +79,8 @@ def chunk_program(
 
     def chunk_step(state, final_round):
         def body(st, _):
-            batches, keys = sampler(st.round)
-            new_st = round_step(st, batches, keys)
+            batches, keys, extras = split_sampled(sampler(st.round))
+            new_st = round_step(st, batches, keys, *extras)
             if metrics_fn is None:
                 return new_st, None
             do_log = jnp.logical_or(st.round % log_every == 0,

@@ -73,6 +73,35 @@ def make_fixed_batch_sampler(batches, *, local_steps: int, num_clients: int,
     return sample
 
 
+def with_topology(sampler, *, w_fn=None, mask_fn=None):
+    """Rides the churn axes on the engine's sampler slot: wraps a batch
+    sampler so each round also draws that round's mixing matrix and/or
+    participation mask (``repro.core.stochastic_topology`` samplers — pure
+    functions of the round index on the same ``fold_in`` discipline as the
+    data draw, so checkpoint restore replays the identical W/mask sequence).
+
+    The wrapped sampler returns ``(batches, keys, extras)``; the engine
+    splats ``extras`` into ``round_step(state, batches, keys, *extras)`` in
+    the order (W, mask) — matching ``make_round_step(traced_w=...,
+    participation=...)``'s extra-operand order.
+    """
+    fns = tuple(f for f in (w_fn, mask_fn) if f is not None)
+    if not fns:
+        raise ValueError("with_topology needs w_fn and/or mask_fn")
+
+    def sample(round_idx):
+        sampled = sampler(round_idx)
+        if len(sampled) > 2:
+            raise ValueError(
+                "with_topology: the wrapped sampler already returns extras; "
+                "compose all per-round draws into a single wrapper instead "
+                "of nesting (the inner draws would be silently dropped)")
+        batches, keys = sampled
+        return batches, keys, tuple(f(round_idx) for f in fns)
+
+    return sample
+
+
 def held_out_eval_batch(
     dm: data_lib.DataModel,
     key,

@@ -36,6 +36,7 @@ from repro.configs.base import AlgorithmConfig, MinimaxConfig
 from repro.core import kgt_minimax as kgt
 from repro.core import mixing as mixing_lib
 from repro.core import objectives, topology
+from repro.core import stochastic_topology as stoch_lib
 from repro.data import synthetic as data_lib
 from repro.optim import schedules
 
@@ -100,7 +101,16 @@ def train(args) -> dict:
         gossip_dtype=args.gossip_dtype,
         # getattr: programmatic callers (tests) build a bare Namespace
         gossip_backend=getattr(args, "gossip_backend", "auto"),
+        topology_family=getattr(args, "topology_family", "static"),
+        edge_prob=getattr(args, "edge_prob", 0.5),
+        client_drop_prob=getattr(args, "client_drop_prob", 0.3),
+        participation_rate=getattr(args, "participation", 1.0),
+        topology_seed=(getattr(args, "topology_seed", None)
+                       if getattr(args, "topology_seed", None) is not None
+                       else args.seed),
     )
+    random_w = algo.topology_family != "static"
+    part = algo.participation_rate < 1.0
     minimax = MinimaxConfig(num_groups=args.groups, mu=args.mu)
     engine_mode = getattr(args, "engine", "scan")
     chunk_rounds = max(1, min(int(getattr(args, "chunk", 16)),
@@ -134,6 +144,28 @@ def train(args) -> dict:
     sampler = engine_lib.make_dro_sampler(
         dm, kt, local_steps=algo.local_steps, num_clients=algo.num_clients,
         per_client_batch=args.batch, seq_len=args.seq_len, cfg=cfg)
+    if random_w or part:
+        # churn axes ride the sampler slot: per-round W / participation mask
+        # drawn on device from the round index (checkpoint-restore exact)
+        if mesh_mode == "decentralized":
+            raise ValueError(
+                "--topology-family/--participation are not supported with "
+                "--mesh decentralized yet (the sharded chunk builder bakes "
+                "a static W); run on the host mesh")
+        topo_key = jax.random.PRNGKey(algo.topology_seed)
+        w_fn = None
+        if random_w:
+            base_w = (topology.mixing_matrix(algo.topology, algo.num_clients)
+                      if algo.topology_family == "dropout" else None)
+            w_fn = stoch_lib.make_w_sampler(
+                algo.topology_family, algo.num_clients, topo_key,
+                base_w=base_w, edge_prob=algo.edge_prob,
+                client_drop_prob=algo.client_drop_prob)
+        mask_fn = None
+        if part:
+            mask_fn = stoch_lib.make_participation_sampler(
+                algo.num_clients, topo_key, algo.participation_rate)
+        sampler = engine_lib.with_topology(sampler, w_fn=w_fn, mask_fn=mask_fn)
     eval_b = engine_lib.held_out_eval_batch(
         dm, jax.random.fold_in(kd, 2), num_clients=algo.num_clients,
         per_client_batch=args.batch, seq_len=args.seq_len, cfg=cfg)
@@ -149,14 +181,28 @@ def train(args) -> dict:
             args, cfg, algo, minimax, sched, sampler, metrics_fn, engine_mode)
         state = jax.device_put(state, state_shard)
     else:
-        round_step = kgt.make_round_step(problem, algo, lr_scale=sched)
+        round_step = kgt.make_round_step(problem, algo, lr_scale=sched,
+                                         traced_w=random_w,
+                                         participation=part)
         step = jax.jit(round_step)
         build_chunk = engine_lib.make_chunk_builder(
             round_step, sampler, metrics_fn, log_every=args.log_every)
-    w = topology.mixing_matrix(algo.topology, algo.num_clients)
+    if random_w:
+        # W is redrawn every round: a static spectral gap would mislabel
+        # the run, so report the family (and its rate) instead
+        topo_part = (f"family={algo.topology_family}"
+                     + (f" (edge_prob={algo.edge_prob})"
+                        if algo.topology_family == "erdos_renyi" else "")
+                     + (f" (drop={algo.client_drop_prob})"
+                        if algo.topology_family == "dropout" else ""))
+    else:
+        w = topology.mixing_matrix(algo.topology, algo.num_clients)
+        topo_part = f"p={topology.spectral_gap(w):.3f}"
+    if part:
+        topo_part += f", participation={algo.participation_rate}"
     print(f"[train] {cfg.name}: {sum(x.size for x in jax.tree.leaves(state.x))/1e6:.2f}M "
           f"client-stacked params, n={algo.num_clients}, K={algo.local_steps}, "
-          f"p={topology.spectral_gap(w):.3f}, algo={algo.algorithm}, "
+          f"{topo_part}, algo={algo.algorithm}, "
           f"engine={engine_mode}"
           + (f" (chunk={chunk_rounds})" if engine_mode == "scan" else ""),
           flush=True)
@@ -197,8 +243,8 @@ def _host_loop(args, state, step, sampler, metrics_fn, cfg):
     history = []
     t0 = time.time()
     for t in range(args.rounds):
-        batches, keys = sample(jnp.int32(t))
-        state = step(state, batches, keys)
+        batches, keys, extras = engine_lib.split_sampled(sample(jnp.int32(t)))
+        state = step(state, batches, keys, *extras)
 
         if t % args.log_every == 0 or t == args.rounds - 1:
             rec = engine_lib.row_to_record(
@@ -243,6 +289,25 @@ def main() -> None:
                     help="host: plain single-device jit; decentralized: the "
                          "repro.dist-sharded round over the local device mesh")
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topology-family", default="static",
+                    choices=list(stoch_lib.TOPOLOGY_FAMILIES),
+                    help="per-round random topology (repro.core."
+                         "stochastic_topology): static keeps --topology "
+                         "fixed; erdos_renyi draws G(n, --edge-prob) with "
+                         "Metropolis weights; pairwise averages one random "
+                         "pair per round; dropout drops each client's links "
+                         "with --client-drop-prob (self-loop fallback)")
+    ap.add_argument("--edge-prob", type=float, default=0.5,
+                    help="erdos_renyi: per-round link probability")
+    ap.add_argument("--client-drop-prob", type=float, default=0.3,
+                    help="dropout family: per-round P[client drops links]")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="partial participation: per-round P[client active]; "
+                         "< 1 freezes inactive clients' (theta, c) for the "
+                         "round (Bernoulli mask, self-loop fallback)")
+    ap.add_argument("--topology-seed", type=int, default=None,
+                    help="seed of the W/mask sampling streams "
+                         "(default: --seed)")
     from repro.kernels.ops import GOSSIP_BACKENDS
 
     ap.add_argument("--mixing-impl", default="dense",

@@ -59,6 +59,11 @@ class Trajectories:
     etas: Dict[str, Any]  # traced stepsize bundle (repro.core.point_etas)
     seed: jnp.ndarray     # int32 sampler seed
     active: jnp.ndarray   # bool — False freezes the trajectory
+    # churn bundle (None on fixed-topology cells): traced scalars feeding the
+    # per-round W/mask draw — {"seed", "edge_prob", "drop_prob", "rate"}.
+    # Like sigma/etas, these are leaves so one compiled cell serves every
+    # edge-probability / participation-rate the grid batches over.
+    topo: Any = None
 
 
 def tree_stack(trees):
@@ -86,7 +91,11 @@ def trajectory_chunk_program(
     ``active`` freeze to the resulting state."""
 
     def chunk(traj: Trajectories, final_round):
-        step = lambda st, b, k: round_step(st, b, k, traj.etas)
+        # extras (a sampled W / participation mask, when the trajectory
+        # sampler draws them) slot in after the eta bundle — the order
+        # make_round_step(traced_etas=True, traced_w=…, participation=…)
+        # expects
+        step = lambda st, b, k, *ex: round_step(st, b, k, traj.etas, *ex)
         sampler = lambda round_idx: traj_sampler(round_idx, traj)
         mfn = None
         if metrics_fn is not None:
@@ -190,5 +199,50 @@ def make_quadratic_traj_sampler(*, local_steps: int, num_clients: int):
             local_steps * num_clients,
         ).reshape(local_steps, num_clients, 2)
         return traj.batches, keys
+
+    return sample
+
+
+def make_churn_traj_sampler(*, local_steps: int, num_clients: int,
+                            family: str, base_w=None,
+                            participation: bool = False):
+    """:func:`make_quadratic_traj_sampler` plus the churn draws: each round
+    also samples the mixing matrix (``family`` ≠ "static") and/or the
+    participation mask from the trajectory's traced ``topo`` bundle.
+
+    The family and the participation flag are static cell properties; the
+    bundle's scalars (topology seed, edge probability, drop probability,
+    participation rate) are trajectory leaves, so e.g. an edge-probability
+    grid axis batches into one compiled cell.  All draws go through
+    ``stochastic_topology.round_stream_key`` — pure in the round index —
+    which is what keeps the vmapped cell bit-identical to the sequential
+    reference and checkpoint restores exact.
+    """
+    from repro.core import stochastic_topology as stoch
+
+    if family not in stoch.TOPOLOGY_FAMILIES:
+        raise ValueError(
+            f"unknown topology family {family!r}: {stoch.TOPOLOGY_FAMILIES}")
+    # compose over the fixed-topology sampler: churn cells must draw the
+    # same data/oracle-key stream as non-churn cells of the same seed
+    base_sample = make_quadratic_traj_sampler(
+        local_steps=local_steps, num_clients=num_clients)
+
+    def sample(round_idx, traj: Trajectories):
+        batches, keys = base_sample(round_idx, traj)
+        topo = traj.topo
+        tkey = jax.random.PRNGKey(topo["seed"])
+        extras = []
+        if family != "static":
+            w_fn = stoch.make_w_sampler(
+                family, num_clients, tkey, base_w=base_w,
+                edge_prob=topo["edge_prob"],
+                client_drop_prob=topo["drop_prob"])
+            extras.append(w_fn(round_idx))
+        if participation:
+            extras.append(stoch.bernoulli_mask(
+                stoch.round_stream_key(tkey, round_idx, stoch.MASK_STREAM),
+                num_clients, topo["rate"]))
+        return batches, keys, tuple(extras)
 
     return sample

@@ -94,6 +94,33 @@ register(GridSpec(
     derive=_eta_s_by_algo,
 ))
 
+def _pin_unread_edge_prob(p):
+    """edge_prob only parameterizes the erdos_renyi draw; pinning it
+    elsewhere + dedup stops the other families running bit-identical
+    trajectories twice and counting them as replicates."""
+    return {} if p["topology_family"] == "erdos_renyi" else {"edge_prob": 0.5}
+
+
+# V6 (beyond-paper): robustness to churn — time-varying random topologies
+# (repro.core.stochastic_topology families) × partial client participation.
+# The family is a static cell split; edge probability and participation
+# rate are traced leaves, with the participation axis spanning 1.0 split on
+# "are mask ops in the graph" exactly like sigma on noise ops.
+register(GridSpec(
+    name="churn",
+    base=dict(n=8, K=4, sigma=0.0, heterogeneity=2.0, topology="full",
+              eps=0.25, eta_cx=0.01, eta_cy=0.1, eta_s=0.5,
+              max_rounds=600, eval_every=25),
+    axes=(static_axis("topology_family",
+                      "static", "erdos_renyi", "pairwise", "dropout"),
+          batch_axis("edge_prob", 0.3, 0.7),
+          batch_axis("participation", 1.0, 0.7,
+                     cell_key=lambda r: r < 1),
+          batch_axis("seed", 0, 1)),
+    derive=_pin_unread_edge_prob,
+    dedup=True,
+))
+
 # CI smoke: 2 seeds × 2 heterogeneity levels, one tiny cell end-to-end
 # (batched path + store write) — scripts/smoke.sh runs this.
 register(GridSpec(

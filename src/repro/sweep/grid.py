@@ -71,11 +71,20 @@ class GridSpec:
     """A named sweep: ``base`` point parameters overlaid by the axes'
     cartesian product, optionally post-processed by ``derive`` (a function
     of the point returning parameter updates — e.g. the theory-prescribed
-    ``eta ∝ 1/K`` coupling, or a topology-dependent eta_s)."""
+    ``eta ∝ 1/K`` coupling, or a topology-dependent eta_s).
+
+    ``dedup=True`` drops points whose post-``derive`` parameters coincide
+    (first occurrence wins) — for grids where an axis only applies to some
+    values of another axis and ``derive`` pins it elsewhere (e.g. the churn
+    grid's ``edge_prob``, read only by the erdos_renyi family): without
+    dedup those cells would run bit-identical trajectories twice and count
+    them as replicates.
+    """
     name: str
     axes: Tuple[Axis, ...]
     base: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     derive: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None
+    dedup: bool = False
 
     def __post_init__(self):
         names = [a.name for a in self.axes]
@@ -91,6 +100,15 @@ class GridSpec:
             if self.derive is not None:
                 p.update(self.derive(p))
             pts.append(p)
+        if self.dedup:
+            seen = set()
+            unique = []
+            for p in pts:
+                k = point_key(p)
+                if k not in seen:
+                    seen.add(k)
+                    unique.append(p)
+            pts = unique
         return pts
 
     def cells(self) -> List[Cell]:

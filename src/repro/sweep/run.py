@@ -31,6 +31,7 @@ from repro.core import (
     init_state,
     make_quadratic_data,
     make_round_step,
+    mixing_matrix,
     point_etas,
     quadratic_cell_problem,
 )
@@ -41,18 +42,31 @@ from repro.sweep import store as store_lib
 DX, DY = 10, 5  # the benchmarks' quadratic geometry (benchmarks.common)
 
 # One-configuration defaults == run_to_epsilon's signature defaults.
+# topology_family/edge_prob/client_drop_prob/participation are the churn
+# axes (repro.core.stochastic_topology): family "static" + participation 1.0
+# is the historical fixed-W full-participation point.
 DEFAULT_POINT: Dict[str, Any] = dict(
     n=8, K=4, sigma=0.1, heterogeneity=1.0, topology="ring",
     algorithm="kgt_minimax", eta_cx=0.01, eta_cy=0.1, eta_s=0.5,
     eps=0.3, max_rounds=2000, seed=0, mixing_impl="dense", eval_every=10,
+    topology_family="static", edge_prob=0.5, client_drop_prob=0.3,
+    participation=1.0,
 )
 
 # Point parameters that change the traced program: same-valued across every
 # point of a cell, enforced at cell build time.  (sigma is special-cased:
 # its *value* is a leaf but sigma>0 toggles the noise ops — grid axes over
-# sigma must declare ``cell_key=lambda s: s > 0``.)
+# sigma must declare ``cell_key=lambda s: s > 0``.  participation is the
+# same shape: the rate is a leaf, but participation<1 toggles the mask ops —
+# axes spanning 1.0 declare ``cell_key=lambda r: r < 1``.)
 STATIC_KEYS = ("algorithm", "n", "K", "topology", "mixing_impl",
-               "eps", "max_rounds", "eval_every")
+               "eps", "max_rounds", "eval_every", "topology_family")
+
+
+def _churn(p: Dict[str, Any]):
+    """(samples W per round, applies a participation mask) — both static
+    program properties of a cell."""
+    return p["topology_family"] != "static", p["participation"] < 1.0
 
 
 def _full_point(p: Dict[str, Any]) -> Dict[str, Any]:
@@ -123,9 +137,16 @@ def prepare_trajectory(p: Dict[str, Any]):
         jnp.float32(p["sigma"]))
     kb = jax.tree.map(
         lambda v: jnp.broadcast_to(v[None], (p["K"], *v.shape)), cb)
+    random_w, part = _churn(p)
+    topo = None
+    if random_w or part:
+        topo = {"seed": jnp.int32(p["seed"]),
+                "edge_prob": jnp.float32(p["edge_prob"]),
+                "drop_prob": jnp.float32(p["client_drop_prob"]),
+                "rate": jnp.float32(p["participation"])}
     traj = batched_lib.Trajectories(
         state=st, batches=kb, etas=point_etas(_cfg(p)),
-        seed=jnp.int32(p["seed"]), active=jnp.asarray(True))
+        seed=jnp.int32(p["seed"]), active=jnp.asarray(True), topo=topo)
     return traj, consts
 
 
@@ -156,9 +177,18 @@ def _cell_programs(p: Dict[str, Any], *, batched: bool, mesh=None,
     """
     noise = p["sigma"] > 0.0
     problem = quadratic_cell_problem(DX, DY, mu=1.0, noise=noise)
-    round_step = make_round_step(problem, _cfg(p), traced_etas=True)
-    sampler = batched_lib.make_quadratic_traj_sampler(
-        local_steps=p["K"], num_clients=p["n"])
+    random_w, part = _churn(p)
+    round_step = make_round_step(problem, _cfg(p), traced_etas=True,
+                                 traced_w=random_w, participation=part)
+    if random_w or part:
+        base_w = (mixing_matrix(p["topology"], p["n"])
+                  if p["topology_family"] in ("static", "dropout") else None)
+        sampler = batched_lib.make_churn_traj_sampler(
+            local_steps=p["K"], num_clients=p["n"],
+            family=p["topology_family"], base_w=base_w, participation=part)
+    else:
+        sampler = batched_lib.make_quadratic_traj_sampler(
+            local_steps=p["K"], num_clients=p["n"])
     if batched:
         build = batched_lib.make_batched_chunk_builder(
             round_step, sampler, mesh=mesh, mesh_axis=mesh_axis)
@@ -246,11 +276,14 @@ def run_cell(cell: grid_lib.Cell, *, mesh=None,
         bad = [k for k in STATIC_KEYS if p[k] != p0[k]]
         if (p["sigma"] > 0.0) != (p0["sigma"] > 0.0):
             bad.append("sigma>0")
+        if _churn(p) != _churn(p0):
+            bad.append("participation<1")
         if bad:
             raise ValueError(
                 f"cell {cell.key!r} mixes static program parameters {bad}; "
                 "declare them as static axes (or give the sigma axis "
-                "cell_key=lambda s: s > 0)")
+                "cell_key=lambda s: s > 0, a participation axis spanning "
+                "1.0 cell_key=lambda r: r < 1)")
 
     t0 = time.perf_counter()
     prepared = [prepare_trajectory(p) for p in points]

@@ -1,0 +1,8 @@
+"""Test-support utilities shipped with the package.
+
+``minihypothesis`` — a tiny, dependency-free stand-in for the subset of the
+`hypothesis` API the property suite uses, so ``tests/test_property.py``
+*runs* (0 skips) in hermetic environments where the real library cannot be
+installed.  CI installs the real thing via the ``[dev]`` extra; see
+``tests/_hyp.py`` for the selection shim.
+"""

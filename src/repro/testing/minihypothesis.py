@@ -1,0 +1,199 @@
+"""A minimal, dependency-free stand-in for the ``hypothesis`` API surface
+this repo's property tests use.
+
+Purpose: the property suite (`tests/test_property.py`) encodes the
+system's load-bearing invariants — Σ_i c_i = 0, W-independent mean
+dynamics, kernel/oracle parity — and silently skipping it wherever
+``hypothesis`` isn't installed (hermetic CI containers, offline dev boxes)
+means those invariants go unchecked exactly where regressions land.  This
+module lets the suite *run everywhere*: the real library when available
+(the ``[dev]`` extra installs it), this fallback otherwise (``tests/_hyp.py``
+selects).
+
+What it implements: ``@given(**strategies)``, ``@settings(max_examples=…,
+deadline=…)`` (other settings accepted and ignored), and the strategies
+``integers``, ``floats``, ``booleans``, ``sampled_from``, ``just``.  What
+it deliberately does not: shrinking, the example database, stateful
+testing, health checks, ``assume``-driven rejection sampling.
+
+Determinism: each test runs ``max_examples`` examples — first the corner
+cases of every strategy (bounds, both booleans, every sampled value in
+order), then pseudo-random draws seeded from the test's qualified name and
+the example index.  Failures therefore reproduce run-to-run and the
+failing example's kwargs appear in the assertion context chained onto the
+original error.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """Draw protocol: ``corners()`` lists must-try values (may be empty),
+    ``draw(rng)`` produces one pseudo-random value."""
+
+    def corners(self) -> list:
+        return []
+
+    def draw(self, rng: random.Random):
+        raise NotImplementedError
+
+    def __or__(self, other):
+        return _OneOf((self, other))
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        if min_value > max_value:
+            raise ValueError(f"integers: empty range [{min_value}, {max_value}]")
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def corners(self):
+        return [self.lo] if self.lo == self.hi else [self.lo, self.hi]
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value: float, max_value: float):
+        if min_value > max_value:
+            raise ValueError(f"floats: empty range [{min_value}, {max_value}]")
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def corners(self):
+        return [self.lo] if self.lo == self.hi else [self.lo, self.hi]
+
+    def draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(Strategy):
+    def corners(self):
+        return [False, True]
+
+    def draw(self, rng):
+        return bool(rng.getrandbits(1))
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, values: Sequence[Any]):
+        self.values = list(values)
+        if not self.values:
+            raise ValueError("sampled_from: empty collection")
+
+    def corners(self):
+        return list(self.values)
+
+    def draw(self, rng):
+        return rng.choice(self.values)
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def corners(self):
+        return [self.value]
+
+    def draw(self, rng):
+        return self.value
+
+
+class _OneOf(Strategy):
+    def __init__(self, options: Sequence[Strategy]):
+        self.options = list(options)
+
+    def corners(self):
+        return [c for s in self.options for c in s.corners()]
+
+    def draw(self, rng):
+        return rng.choice(self.options).draw(rng)
+
+
+class _StrategiesNamespace:
+    """Mimics ``from hypothesis import strategies as st`` usage."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_ignored) -> Strategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(values: Sequence[Any]) -> Strategy:
+        return _SampledFrom(values)
+
+    @staticmethod
+    def just(value) -> Strategy:
+        return _Just(value)
+
+    @staticmethod
+    def one_of(*options: Strategy) -> Strategy:
+        return _OneOf(options)
+
+
+strategies = _StrategiesNamespace()
+
+
+def settings(**kwargs) -> Callable:
+    """Decorator recording settings (only ``max_examples`` is honored;
+    ``deadline`` & co. are accepted for API compatibility).  Works above or
+    below ``@given`` — ``functools.wraps`` propagates the attribute up and
+    ``given``'s wrapper reads it lazily at call time."""
+
+    def decorate(fn):
+        fn._mh_settings = dict(kwargs)
+        return fn
+
+    return decorate
+
+
+def given(**param_strategies: Strategy) -> Callable:
+    """Decorator running the test over deterministic example draws."""
+    for name, strat in param_strategies.items():
+        if not isinstance(strat, Strategy):
+            raise TypeError(f"given({name}=...): not a strategy: {strat!r}")
+    names = sorted(param_strategies)
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_mh_settings", {})
+            max_examples = int(conf.get("max_examples", DEFAULT_MAX_EXAMPLES))
+            corner_lists = {k: param_strategies[k].corners() for k in names}
+            for idx in range(max_examples):
+                rng = random.Random(
+                    f"{fn.__module__}.{getattr(fn, '__qualname__', fn.__name__)}"
+                    f":{idx}")
+                example = {}
+                for k in names:
+                    cs = corner_lists[k]
+                    example[k] = (cs[idx] if idx < len(cs)
+                                  else param_strategies[k].draw(rng))
+                try:
+                    fn(*args, **example, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"minihypothesis: falsifying example #{idx}: "
+                        f"{example}") from e
+
+        # pytest must not mistake the strategy parameters for fixtures: hide
+        # the wrapped signature (functools.wraps exposes it via __wrapped__)
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.is_hypothesis_test = True  # what real hypothesis marks
+        return wrapper
+
+    return decorate

@@ -1,0 +1,24 @@
+"""Shared hypothesis import for the property suite.
+
+The real library when installed (``pip install -e '.[dev]'`` — what CI
+does), else the bundled deterministic fallback
+(``repro.testing.minihypothesis``), so the property tests always *run* —
+``pytest -q tests/test_property.py`` must report 0 skipped in every
+environment.  Test modules import ``given``/``settings``/``st`` from here
+and must stay within the API subset the fallback implements (integers,
+floats, booleans, sampled_from, just, one_of).  One more restriction: the
+fallback's ``@given`` exposes a zero-argument signature to pytest, so do
+NOT combine it with pytest fixtures or ``@pytest.mark.parametrize`` on the
+same test — that works under real hypothesis but fails collection here;
+fold the extra axis into a strategy instead.
+"""
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    USING_REAL_HYPOTHESIS = True
+except ImportError:  # hermetic/offline environment
+    from repro.testing.minihypothesis import given, settings  # noqa: F401
+    from repro.testing.minihypothesis import strategies as st  # noqa: F401
+
+    USING_REAL_HYPOTHESIS = False

@@ -18,8 +18,10 @@ from repro.core import (
     init_state,
     make_quadratic_data,
     make_round_step,
+    mixing_matrix,
     quadratic_problem,
 )
+from repro.core import stochastic_topology as stoch
 
 ALGOS = ["kgt_minimax", "dsgda", "local_sgda", "gt_gda"]
 
@@ -44,11 +46,43 @@ def _setup(algo="kgt_minimax", mixing_impl="dense", topology="ring",
     return prob, st, step, sampler
 
 
+def _churn_setup(family="erdos_renyi", rate=0.7, mixing_impl="dense",
+                 n=4, K=3, sigma=0.3, seed=0):
+    """_setup plus the churn axes: a per-round sampled W (and participation
+    mask when rate < 1) riding the sampler slot via with_topology, and a
+    round_step taking them as traced operands."""
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=6, dy=3, heterogeneity=1.5)
+    prob = quadratic_problem(data, sigma=sigma)
+    cfg = AlgorithmConfig(
+        algorithm="kgt_minimax", num_clients=n, local_steps=K, eta_cx=0.01,
+        eta_cy=0.1, eta_sx=0.5, eta_sy=0.5, topology="full",
+        mixing_impl=mixing_impl, gossip_backend="xla")
+    cb = {k: v for k, v in data.items() if k != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (K, *v.shape)), cb)
+    st = init_state(prob, cfg, key, init_batch=cb,
+                    init_keys=jax.random.split(key, n))
+    part = rate < 1.0
+    step = make_round_step(prob, cfg, traced_w=(family != "static"),
+                           participation=part)
+    base = engine_lib.make_fixed_batch_sampler(
+        kb, local_steps=K, num_clients=n, seed=seed)
+    tkey = jax.random.PRNGKey(seed * 31 + 7)
+    w_fn = None
+    if family != "static":
+        w_fn = stoch.make_w_sampler(
+            family, n, tkey, base_w=mixing_matrix("full", n),
+            edge_prob=0.5, client_drop_prob=0.3)
+    mask_fn = stoch.make_participation_sampler(n, tkey, rate) if part else None
+    sampler = engine_lib.with_topology(base, w_fn=w_fn, mask_fn=mask_fn)
+    return prob, st, step, sampler
+
+
 def _host_loop(st, step, sampler, rounds):
     jstep = jax.jit(step)
     for t in range(rounds):
-        batches, keys = sampler(jnp.int32(t))
-        st = jstep(st, batches, keys)
+        batches, keys, extras = engine_lib.split_sampled(sampler(jnp.int32(t)))
+        st = jstep(st, batches, keys, *extras)
     return st
 
 
@@ -84,6 +118,46 @@ def test_engine_matches_host_loop_topology_cycle(mixing_impl):
     st_engine, _ = engine_lib.run(st, build, total_rounds=7, chunk_rounds=4)
     st_host = _host_loop(st, step, sampler, 7)
     _assert_states_equal(st_engine, st_host, f"cycle/{mixing_impl}")
+
+
+@pytest.mark.parametrize("family,rate,mixing_impl", [
+    ("erdos_renyi", 0.7, "dense"),
+    ("pairwise", 1.0, "dense"),
+    ("dropout", 0.6, "pallas_packed"),
+])
+def test_engine_matches_host_loop_stochastic_topology(family, rate,
+                                                      mixing_impl):
+    """Churn on the sampler slot: per-round sampled W + participation mask
+    inside the scanned chunk == the per-round host loop, bit for bit."""
+    prob, st, step, sampler = _churn_setup(
+        family=family, rate=rate, mixing_impl=mixing_impl)
+    build = engine_lib.make_chunk_builder(step, sampler, donate=False)
+    st_engine, _ = engine_lib.run(st, build, total_rounds=7, chunk_rounds=3)
+    st_host = _host_loop(st, step, sampler, 7)
+    _assert_states_equal(st_engine, st_host, f"{family}/{rate}/{mixing_impl}")
+
+
+def test_checkpoint_restore_resumes_stochastic_topology(tmp_path):
+    """Mid-run restore under a time-varying *random* topology + partial
+    participation: the W/mask draws key off state.round (fold_in), so a
+    restored checkpoint replays the exact remaining W/mask sequence — with
+    misaligned chunk boundaries on the resume leg."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    prob, st, step, sampler = _churn_setup(family="erdos_renyi", rate=0.6,
+                                           sigma=0.4)
+    build = engine_lib.make_chunk_builder(step, sampler, donate=False)
+    hook = engine_lib.checkpoint_hook(str(tmp_path), every=4)
+    st_full, _ = engine_lib.run(st, build, total_rounds=9, chunk_rounds=2,
+                                hooks=[hook])
+
+    ckpt = str(tmp_path / "round_000004.npz")
+    assert ckpt_lib.load_metadata(ckpt)["round"] == 4
+    template = jax.tree.map(jnp.zeros_like, st)
+    st_resumed = ckpt_lib.restore(ckpt, template)
+    st_resumed, _ = engine_lib.run(st_resumed, build, total_rounds=9,
+                                   chunk_rounds=3)  # misaligned chunks
+    _assert_states_equal(st_resumed, st_full, "churn-resume")
 
 
 def test_metrics_buffer_matches_host_diagnostics():

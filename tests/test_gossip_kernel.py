@@ -16,11 +16,19 @@ from repro.core import (
     make_round_step,
     quadratic_problem,
 )
-from repro.core import packing, topology
+from repro.core import packing, stochastic_topology as stoch, topology
 from repro.kernels import ops, ref
 
 TOPOLOGIES = ("ring", "torus", "full", "exp")
 CLIENT_COUNTS = (1, 2, 4, 8)
+# torus only exists for square client counts — parametrized explicitly
+# (no silent skips; the constructor raising on non-square n is asserted
+# below and in test_topology.py)
+SQUARE_CLIENT_COUNTS = tuple(n for n in CLIENT_COUNTS
+                             if int(round(np.sqrt(n))) ** 2 == n)
+TOPO_CLIENTS = tuple(
+    (t, n) for t in TOPOLOGIES
+    for n in (SQUARE_CLIENT_COUNTS if t == "torus" else CLIENT_COUNTS))
 
 
 def _operands(n, d, seed=0):
@@ -32,21 +40,13 @@ def _operands(n, d, seed=0):
     return delta, theta, c
 
 
-def _square(n):
-    s = int(round(np.sqrt(n)))
-    return s * s == n
-
-
 # ---------------------------------------------------------------------------
 # kernel (interpret) vs oracle
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("gossip_dtype", [None, "bfloat16"])
-@pytest.mark.parametrize("n", CLIENT_COUNTS)
-@pytest.mark.parametrize("topo", TOPOLOGIES)
+@pytest.mark.parametrize("topo,n", TOPO_CLIENTS)
 def test_kernel_matches_oracle(topo, n, gossip_dtype):
-    if topo == "torus" and not _square(n):
-        pytest.skip("torus needs a square client count")
     w = topology.mixing_matrix(topo, n)
     d = 384 + n  # not a lane/block multiple for most n
     delta, theta, c = _operands(n, d, seed=n)
@@ -86,6 +86,40 @@ def test_oracle_math_against_handwritten():
     np.testing.assert_allclose(t_r, wt + eta_s * wd, rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(c_r, np.asarray(c) + s * (np.asarray(delta) - wd),
                                rtol=1e-6, atol=1e-6)
+
+
+def test_torus_gossip_rejects_nonsquare_client_count():
+    """No silent skip: asking for a torus over a non-square client count is
+    a configuration error the constructor reports loudly."""
+    for n in (2, 8):
+        with pytest.raises(ValueError, match="square"):
+            topology.mixing_matrix("torus", n)
+
+
+@pytest.mark.parametrize("masked", [False, True])
+@pytest.mark.parametrize("family", ["erdos_renyi", "pairwise", "dropout"])
+def test_kernel_matches_oracle_sampled_w(family, masked):
+    """Traced-W parity: per-round *sampled* mixing matrices (every
+    stochastic topology family), optionally participation-masked, through
+    the interpret kernel vs the xla oracle — the W operand is traced on
+    both paths (ops.fused_gossip_round takes it as a jit argument), so this
+    mirrors the static-topology grid above for the churn tentpole."""
+    n, d = 8, 384 + 8
+    w_fn = stoch.make_w_sampler(
+        family, n, jax.random.PRNGKey(7),
+        base_w=topology.mixing_matrix("exp", n), edge_prob=0.4,
+        client_drop_prob=0.3)
+    mask_fn = stoch.make_participation_sampler(n, jax.random.PRNGKey(9), 0.6)
+    for r in (0, 3):
+        w = w_fn(jnp.int32(r))
+        if masked:
+            w = stoch.masked_w(w, mask_fn(jnp.int32(r)))
+        delta, theta, c = _operands(n, d, seed=r)
+        args = (w, delta, theta, c, 0.7, 4.2)
+        t_k, c_k = ops.fused_gossip_round(*args, backend="interpret")
+        t_r, c_r = ops.fused_gossip_round(*args, backend="xla")
+        np.testing.assert_allclose(t_k, t_r, rtol=0, atol=1e-6)
+        np.testing.assert_allclose(c_k, c_r, rtol=0, atol=1e-6)
 
 
 def test_resolve_gossip_backend_validates():
@@ -234,3 +268,42 @@ def test_packed_round_topology_cycle():
     for a, b in zip(jax.tree.leaves(outs["dense"].x),
                     jax.tree.leaves(outs["pallas_packed"].x)):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("family", ["erdos_renyi", "pairwise", "dropout"])
+def test_packed_round_matches_dense_under_churn(family, backend):
+    """Full round_step parity under the churn tentpole: a per-round sampled
+    W *and* a per-round participation mask, fed as traced operands to both
+    the dense per-leaf round and the packed fused epilogue (xla oracle and
+    interpret kernel) — identical draws, matching trajectories."""
+    n, K = 4, 2
+    key = jax.random.PRNGKey(5)
+    data = make_quadratic_data(key, n, dx=6, dy=3, heterogeneity=1.5)
+    prob = quadratic_problem(data, sigma=0.0)
+    w_fn = stoch.make_w_sampler(
+        family, n, jax.random.PRNGKey(11),
+        base_w=topology.mixing_matrix("full", n), edge_prob=0.5,
+        client_drop_prob=0.3)
+    mask_fn = stoch.make_participation_sampler(n, jax.random.PRNGKey(11), 0.7)
+    outs = {}
+    for impl in ("dense", "pallas_packed"):
+        cfg = AlgorithmConfig(num_clients=n, local_steps=K, eta_cx=0.01,
+                              eta_cy=0.1, eta_sx=0.5, eta_sy=0.5,
+                              topology="full", mixing_impl=impl,
+                              gossip_backend=backend)
+        cb = {k: v for k, v in data.items() if k != "mu"}
+        kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (K, *v.shape)), cb)
+        st = init_state(prob, cfg, key, init_batch=cb,
+                        init_keys=jax.random.split(key, n))
+        step = jax.jit(make_round_step(prob, cfg, traced_w=True,
+                                       participation=True))
+        for t in range(4):
+            keys = jax.random.split(jax.random.PRNGKey(t), K * n).reshape(K, n, 2)
+            st = step(st, kb, keys, w_fn(jnp.int32(t)), mask_fn(jnp.int32(t)))
+        outs[impl] = st
+    for name in ("x", "y", "cx", "cy"):
+        for a, b in zip(jax.tree.leaves(getattr(outs["dense"], name)),
+                        jax.tree.leaves(getattr(outs["pallas_packed"], name))):
+            np.testing.assert_allclose(a, b, rtol=0, atol=1e-6,
+                                       err_msg=f"{family}/{backend}/{name}")

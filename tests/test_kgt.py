@@ -187,8 +187,107 @@ def check_round_mean_dynamics(algo, n, k, seed, mixing_impl="dense"):
 @pytest.mark.parametrize("mixing_impl", ["dense", "pallas_packed"])
 def test_round_mean_dynamics_under_random_doubly_stochastic_w(algo, mixing_impl):
     """Deterministic cousin of the hypothesis property in test_property.py
-    (which is skipped where hypothesis is not installed)."""
+    (which runs everywhere since the bundled fallback landed)."""
     check_round_mean_dynamics(algo, n=6, k=3, seed=11, mixing_impl=mixing_impl)
+
+
+def check_participation_invariants(algo, n, k, seed, mask_bits,
+                                   mixing_impl="dense", rounds=2):
+    """Round steps with traced W + a participation mask (mask_bits: client i
+    active iff bit i set): the client-mean dynamics are W-independent (the
+    masked W stays doubly stochastic, so x̄ moves by η_s·mean(masked Δ)
+    whatever W was drawn), Σ_i c_i stays 0 under ANY mask, and inactive
+    clients' (θ, c) are frozen bit-exactly."""
+    from repro.core import stochastic_topology as stoch
+
+    mask = jnp.asarray([(mask_bits >> i) & 1 == 1 for i in range(n)])
+    w = doubly_stochastic_w(n, seed)
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=5, dy=3, heterogeneity=2.0)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(algorithm=algo, num_clients=n, local_steps=k,
+                          eta_cx=0.01, eta_cy=0.05, eta_sx=0.4, eta_sy=0.4,
+                          mixing_impl=mixing_impl, gossip_backend="xla")
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    st = init_state(prob, cfg, key, init_batch=cb,
+                    init_keys=jax.random.split(key, n))
+    step = jax.jit(make_round_step(prob, cfg, traced_w=True,
+                                   participation=True))
+    w_j = jnp.full((n, n), 1.0 / n, jnp.float32)
+    st_w = st
+    inactive = ~np.asarray(mask)
+    for t in range(rounds):
+        keys = jax.random.split(jax.random.PRNGKey(seed + t),
+                                k * n).reshape(k, n, 2)
+        prev_w = st_w
+        st_w = step(st_w, kb, keys, jnp.asarray(w, jnp.float32), mask)
+        if t == 0:
+            # W-independence of the mean is a ONE-round property from a
+            # common state (after a round the per-client spread differs, so
+            # later local gradients do too): x̄ must move exactly as under
+            # W = J masked by the same participation pattern
+            st_j = step(prev_w, kb, keys, w_j, mask)
+            np.testing.assert_allclose(mean_over_clients(st_w.x),
+                                       mean_over_clients(st_j.x),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(mean_over_clients(st_w.y),
+                                       mean_over_clients(st_j.y),
+                                       rtol=1e-5, atol=1e-5)
+        # inactive clients frozen bit-exactly, every round
+        for name in ("x", "y", "cx", "cy"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_w, name))[inactive],
+                np.asarray(getattr(prev_w, name))[inactive], err_msg=name)
+        for c in (st_w.cx, st_w.cy):
+            mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
+            assert float(jnp.abs(mean_c).max()) < 1e-4
+
+
+@pytest.mark.parametrize("algo", ["kgt_minimax", "dsgda", "local_sgda", "gt_gda"])
+@pytest.mark.parametrize("mixing_impl", ["dense", "pallas_packed"])
+def test_participation_invariants_all_variants(algo, mixing_impl):
+    """Deterministic cousin of the participation hypothesis properties in
+    test_property.py: a mask dropping clients 1 and 3 of 6."""
+    check_participation_invariants(algo, n=6, k=3, seed=5,
+                                   mask_bits=0b110101, mixing_impl=mixing_impl)
+
+
+def test_participation_all_inactive_freezes_everything():
+    """The degenerate all-clients-down round is a global no-op (bit-exact),
+    except the round counter advances."""
+    n, k = 4, 2
+    key = jax.random.PRNGKey(3)
+    data = make_quadratic_data(key, n, dx=4, dy=2)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05)
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    st = init_state(prob, cfg, key, init_batch=cb,
+                    init_keys=jax.random.split(key, n))
+    step = jax.jit(make_round_step(prob, cfg, participation=True))
+    keys = jax.random.split(jax.random.PRNGKey(0), k * n).reshape(k, n, 2)
+    out = step(st, kb, keys, jnp.zeros((n,), bool))
+    for name in ("x", "y", "cx", "cy"):
+        for a, b in zip(jax.tree.leaves(getattr(out, name)),
+                        jax.tree.leaves(getattr(st, name))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(out.round) == int(st.round) + 1
+
+
+def test_round_step_extras_arity_validated():
+    key = jax.random.PRNGKey(0)
+    data = make_quadratic_data(key, 4, dx=4, dy=2)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=4, local_steps=2)
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (2, *v.shape)), cb)
+    st = init_state(prob, cfg, key)
+    step = make_round_step(prob, cfg, traced_w=True)
+    keys = jax.random.split(key, 2 * 4).reshape(2, 4, 2)
+    with pytest.raises(TypeError, match="extra operand"):
+        step(st, kb, keys)  # missing the traced W
 
 
 def test_make_round_step_validates_mixing_impl():
@@ -208,6 +307,20 @@ def test_make_round_step_validates_mixing_impl():
     ):
         with pytest.raises(ValueError):
             make_round_step(prob, cfg)
+    # the churn paths lower gossip densely: ring impls can't realize a
+    # traced/masked W, and traced_w fights a topology_cycle
+    with pytest.raises(ValueError, match="neighbor-only"):
+        make_round_step(prob, AlgorithmConfig(num_clients=4,
+                                              mixing_impl="ring"),
+                        traced_w=True)
+    with pytest.raises(ValueError, match="neighbor-only"):
+        make_round_step(prob, AlgorithmConfig(num_clients=4,
+                                              mixing_impl="fused_ring"),
+                        participation=True)
+    with pytest.raises(ValueError, match="topology_cycle"):
+        make_round_step(prob, AlgorithmConfig(num_clients=4,
+                                              topology_cycle=("ring", "full")),
+                        traced_w=True)
 
 
 def test_consensus_reached_from_identical_init():

@@ -1,13 +1,17 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+This suite RUNS everywhere — 0 skips: with the real ``hypothesis`` when
+installed (the ``[dev]`` extra), else on the bundled deterministic fallback
+(``repro.testing.minihypothesis``).  ``tests/_hyp.py`` selects; stay within
+the strategy subset it implements.  scripts/smoke.sh fails CI if this file
+collects zero tests or reports any skip.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="hypothesis not installed; property tests skipped")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.base import AlgorithmConfig
 from repro.core import (
@@ -19,6 +23,7 @@ from repro.core import (
     quadratic_problem,
     spectral_gap,
 )
+from repro.core import stochastic_topology as stoch
 from repro.core.mixing import consensus_error, mix_dense
 from repro.kernels import rglru_scan
 
@@ -136,3 +141,113 @@ def test_round_step_average_dynamics_fullmesh(seed):
     keys_p = keys[:, perm]
     out2 = mean_over_clients(step(stt_p, kb_p, keys_p).x)
     np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# stochastic topologies + partial participation (the churn tentpole)
+# ---------------------------------------------------------------------------
+
+def _assert_doubly_stochastic(w, n):
+    w = np.asarray(w)
+    assert w.shape == (n, n)
+    np.testing.assert_allclose(w, w.T, atol=1e-6)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+    assert (w >= -1e-6).all()
+
+
+@given(family=st.sampled_from(["erdos_renyi", "pairwise", "dropout"]),
+       n=st.integers(2, 12), round_idx=st.integers(0, 1000),
+       edge_prob=st.floats(0.0, 1.0), drop=st.floats(0.0, 1.0),
+       seed=st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_sampled_family_w_is_doubly_stochastic(family, n, round_idx,
+                                               edge_prob, drop, seed):
+    """Every topology family draws a symmetric doubly-stochastic W for any
+    round index, edge probability, and drop probability — Assumption 4
+    minus the fixed spectral gap, which is exactly what the mean-dynamics
+    and Σc = 0 invariants need."""
+    w_fn = stoch.make_w_sampler(
+        family, n, jax.random.PRNGKey(seed),
+        base_w=mixing_matrix("full", n), edge_prob=edge_prob,
+        client_drop_prob=drop)
+    _assert_doubly_stochastic(w_fn(jnp.int32(round_idx)), n)
+
+
+@given(n=st.integers(1, 12), mask_bits=st.integers(0, 2**12 - 1),
+       seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_masked_w_self_loop_fallback(n, mask_bits, seed):
+    """masked_w keeps ANY doubly-stochastic W doubly stochastic under ANY
+    mask (all-zero and all-one included), and collapses masked-out clients'
+    rows/columns to e_i exactly."""
+    from test_kgt import doubly_stochastic_w
+
+    mask = np.array([(mask_bits >> i) & 1 == 1 for i in range(n)])
+    w = stoch.masked_w(doubly_stochastic_w(n, seed), jnp.asarray(mask))
+    _assert_doubly_stochastic(w, n)
+    w = np.asarray(w)
+    for i in np.flatnonzero(~mask):
+        np.testing.assert_array_equal(w[i], np.eye(n)[i])
+        np.testing.assert_array_equal(w[:, i], np.eye(n)[i])
+
+
+@given(algo=st.sampled_from(["kgt_minimax", "dsgda", "local_sgda", "gt_gda"]),
+       n=st.integers(2, 8), k=st.integers(1, 4),
+       mask_bits=st.integers(0, 2**8 - 1), seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_participation_mean_dynamics_and_sum_c(algo, n, k, mask_bits, seed):
+    """Under an arbitrary participation mask and an arbitrary random
+    doubly-stochastic W: the client-mean dynamics are W-independent, Σ_i
+    c_i = 0 (Lemma 8 survives churn because the masked W stays doubly
+    stochastic), and inactive clients freeze bit-exactly.  Helper shared
+    with the deterministic cousins in test_kgt.py."""
+    from test_kgt import check_participation_invariants
+
+    check_participation_invariants(algo, n=n, k=k, seed=seed,
+                                   mask_bits=mask_bits)
+
+
+@given(n=st.sampled_from([2, 4, 8]), mask_bits=st.integers(0, 2**8 - 1),
+       seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_participation_invariants_packed_engine(n, mask_bits, seed):
+    """Same churn invariants through the pallas_packed fused round engine
+    (traced W + mask as kernel-feeding operands)."""
+    from test_kgt import check_participation_invariants
+
+    check_participation_invariants("kgt_minimax", n=n, k=2, seed=seed,
+                                   mask_bits=mask_bits,
+                                   mixing_impl="pallas_packed")
+
+
+@given(family=st.sampled_from(["erdos_renyi", "pairwise", "dropout"]),
+       n=st.integers(2, 6), edge_prob=st.floats(0.1, 0.9),
+       rate=st.floats(0.0, 1.0), seed=st.integers(0, 200))
+@settings(max_examples=12, deadline=None)
+def test_sum_c_zero_under_sampled_w_sequences(family, n, edge_prob, rate,
+                                              seed):
+    """Σ_i c_i stays 0 across rounds of a *sequence* of per-round sampled
+    Ws and Bernoulli participation masks — the setting the engine actually
+    runs under churn."""
+    k = 2
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=5, dy=3, heterogeneity=1.5)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, eta_sx=0.4, eta_sy=0.4)
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = jax.jit(make_round_step(prob, cfg, traced_w=True,
+                                   participation=True))
+    w_fn = stoch.make_w_sampler(family, n, key,
+                                base_w=mixing_matrix("full", n),
+                                edge_prob=edge_prob, client_drop_prob=0.4)
+    mask_fn = stoch.make_participation_sampler(n, key, rate)
+    for t in range(3):
+        keys = jax.random.split(jax.random.PRNGKey(t), k * n).reshape(k, n, 2)
+        stt = step(stt, kb, keys, w_fn(jnp.int32(t)), mask_fn(jnp.int32(t)))
+    for c in (stt.cx, stt.cy):
+        mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
+        assert float(jnp.abs(mean_c).max()) < 1e-4

@@ -85,6 +85,18 @@ def test_run_cell_rejects_sigma_span_without_cell_key():
         sweep_run.run_cell(cell)
 
 
+def test_run_cell_rejects_participation_span_without_cell_key():
+    """participation < 1 toggles the mask ops in the graph, exactly like
+    sigma > 0 toggles the noise ops: an axis spanning 1.0 must cell-split."""
+    spec = grid.GridSpec(
+        name="t", base=dict(max_rounds=10, eval_every=5),
+        axes=(grid.batch_axis("participation", 1.0, 0.5),),
+    )
+    [cell] = spec.cells()
+    with pytest.raises(ValueError, match="participation"):
+        sweep_run.run_cell(cell)
+
+
 def test_unknown_point_parameter_rejected():
     with pytest.raises(ValueError, match="unknown point parameters"):
         sweep_run.run_point({"nope": 1})
@@ -157,6 +169,39 @@ def test_bitmatch_packed_mixing_cell():
                   eta_cx=0.02, eta_cy=0.2, eta_s=0.5, max_rounds=20,
                   eval_every=10, mixing_impl="pallas_packed",
                   topology="full"),
+        axes=(grid.batch_axis("seed", 0, 1),),
+    )
+    _assert_cells_bitmatch(spec)
+
+
+def test_bitmatch_churn_cells():
+    """Acceptance for the churn tentpole: the vmapped cell and the
+    sequential reference agree bit-for-bit when every round draws a random
+    W (topology family static-split) and a participation mask, with the
+    edge probability and participation rate riding the batch axes as
+    traced leaves."""
+    spec = grid.GridSpec(
+        name="t_churn",
+        base=dict(n=4, K=2, sigma=0.0, heterogeneity=1.0, eps=0.05,
+                  eta_cx=0.02, eta_cy=0.2, eta_s=0.5, max_rounds=20,
+                  eval_every=10, topology="full", seed=0),
+        axes=(grid.static_axis("topology_family", "erdos_renyi", "dropout"),
+              grid.batch_axis("edge_prob", 0.3, 0.8),
+              grid.batch_axis("participation", 1.0, 0.6,
+                              cell_key=lambda r: r < 1)),
+    )
+    assert len(spec.cells()) == 4  # 2 families x {mask ops on, off}
+    _assert_cells_bitmatch(spec)
+
+
+def test_bitmatch_pairwise_gossip_cell():
+    """The randomized-pairwise family (one random pair per round) through
+    the same batched-vs-sequential contract."""
+    spec = grid.GridSpec(
+        name="t_pair",
+        base=dict(n=4, K=2, sigma=0.3, heterogeneity=1.0, eps=0.05,
+                  eta_cx=0.02, eta_cy=0.2, eta_s=0.5, max_rounds=20,
+                  eval_every=10, topology_family="pairwise"),
         axes=(grid.batch_axis("seed", 0, 1),),
     )
     _assert_cells_bitmatch(spec)
@@ -324,6 +369,20 @@ def test_engine_run_records_carry_split_stamps():
 # defs sanity + benchmark row helpers
 # ---------------------------------------------------------------------------
 
+def test_grid_dedup_drops_coinciding_points():
+    spec = grid.GridSpec(
+        name="t_dd",
+        axes=(grid.static_axis("fam", "a", "b"),
+              grid.batch_axis("p", 0.3, 0.7)),
+        derive=lambda pt: {} if pt["fam"] == "a" else {"p": 0.5},
+        dedup=True,
+    )
+    pts = spec.points()
+    # fam=a keeps both p values; fam=b collapses to the single pinned point
+    assert [(p["fam"], p["p"]) for p in pts] == [
+        ("a", 0.3), ("a", 0.7), ("b", 0.5)]
+
+
 def test_paper_sweep_defs_partition_as_documented():
     expected_cells = {
         "local_steps": 5,      # K static
@@ -331,6 +390,7 @@ def test_paper_sweep_defs_partition_as_documented():
         "topology": 4,
         "speedup": 4,          # n static
         "convergence": 4,      # algorithm static, 8 seeds batched
+        "churn": 8,            # family static x participation cell split
         "smoke": 1,
     }
     for name, n_cells in expected_cells.items():
@@ -343,6 +403,9 @@ def test_paper_sweep_defs_partition_as_documented():
             for k in sweep_run.STATIC_KEYS:
                 assert len({p[k] for p in pts}) == 1, (name, cell.key, k)
     assert len(defs.SWEEPS["convergence"].points()) == 32
+    # churn: edge_prob only varies the erdos_renyi family (8 points); the
+    # other three families dedup to participation x seed (4 each)
+    assert len(defs.SWEEPS["churn"].points()) == 8 + 3 * 4
 
 
 def test_replicate_row_helpers():

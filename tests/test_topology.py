@@ -1,14 +1,9 @@
 import numpy as np
 import pytest
 
-# Only test_contraction_property needs hypothesis; the validity tests below
-# must keep running when it is absent, so the skip is per-test, not
-# module-level importorskip (which would drop the whole module).
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-except ImportError:
-    given = settings = st = None
+# _hyp resolves to real hypothesis when installed, else the bundled
+# fallback — the contraction property below runs either way (no skips).
+from _hyp import given, settings, st
 
 from repro.core import topology
 
@@ -29,9 +24,12 @@ def test_torus_valid(n):
     assert np.allclose(w, w.T) and np.allclose(w.sum(1), 1.0)
 
 
-def test_torus_rejects_nonsquare():
-    with pytest.raises(ValueError):
-        topology.mixing_matrix("torus", 6)
+@pytest.mark.parametrize("n", [2, 3, 6, 8, 15])
+def test_torus_rejects_nonsquare_with_clear_error(n):
+    """The constructor must fail loudly (not silently skip) on non-square
+    client counts — callers parametrize square n explicitly instead."""
+    with pytest.raises(ValueError, match=f"torus needs a square n, got {n}"):
+        topology.mixing_matrix("torus", n)
 
 
 def test_spectral_gap_ordering():
@@ -43,22 +41,17 @@ def test_spectral_gap_ordering():
     assert gaps["full"] > gaps["exp"] > gaps["torus"] > gaps["ring"] > 0
 
 
-if st is not None:
-    @given(n=st.integers(2, 24),
-           name=st.sampled_from(["ring", "full", "exp", "star"]))
-    @settings(max_examples=40, deadline=None)
-    def test_contraction_property(n, name):
-        """Assumption 4: ||XW - X̄||_F^2 <= (1-p) ||X - X̄||_F^2 for random X."""
-        w = topology.mixing_matrix(name, n)
-        p = topology.spectral_gap(w)
-        assert 0 <= p <= 1 + 1e-9
-        rng = np.random.default_rng(n)
-        x = rng.normal(size=(7, n))
-        xbar = x.mean(1, keepdims=True)
-        lhs = np.linalg.norm(x @ w - xbar) ** 2
-        rhs = (1 - p) * np.linalg.norm(x - xbar) ** 2
-        assert lhs <= rhs + 1e-8 * max(1.0, rhs)
-else:
-    @pytest.mark.skip(reason="hypothesis not installed")
-    def test_contraction_property():
-        pass
+@given(n=st.integers(2, 24),
+       name=st.sampled_from(["ring", "full", "exp", "star"]))
+@settings(max_examples=40, deadline=None)
+def test_contraction_property(n, name):
+    """Assumption 4: ||XW - X̄||_F^2 <= (1-p) ||X - X̄||_F^2 for random X."""
+    w = topology.mixing_matrix(name, n)
+    p = topology.spectral_gap(w)
+    assert 0 <= p <= 1 + 1e-9
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(7, n))
+    xbar = x.mean(1, keepdims=True)
+    lhs = np.linalg.norm(x @ w - xbar) ** 2
+    rhs = (1 - p) * np.linalg.norm(x - xbar) ** 2
+    assert lhs <= rhs + 1e-8 * max(1.0, rhs)
