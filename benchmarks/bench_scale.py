@@ -1,0 +1,163 @@
+"""Clients-axis scaling benchmark: edge-proportional sparse gossip vs n².
+
+The dense round epilogue contracts an (n, n) mixing matrix against the
+packed (n, D) state — O(n²·D) per round, which is what capped the clients
+axis at toy sizes.  The sparse neighbor-gather epilogue
+(``kernels.ops.sparse_gossip_round`` over ``core.sparse_topology``) costs
+O(edges·D).  This benchmark times one full round epilogue at
+n ∈ {64, 256, 1024, 4096} on the exponential graph (degree ≈ 2·log₂ n, the
+paper's best-gap sparse topology) and fits the log-log cost-vs-n slope:
+edge count for the exp graph grows as n·log n, so the sparse slope must
+stay well under 2 while dense tracks its n² model.  Dense is measured only
+up to ``stochastic_topology.DENSE_MATERIALIZATION_LIMIT``·2 — past that the
+matrix materialization is exactly the bug the sparse path removes.
+
+CSV rows: ``scale,impl=...,n=...,edges=...,wall_ms=...`` plus the fitted
+slopes.  ``--smoke`` instead compiles and runs ONE sparse round step at
+n=256 sharded over the available fake CPU devices (scripts/smoke.sh sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` first) and checks
+the Σc = 0 tracking invariant — the CI-sized proof that the sparse path
+works end to end on a mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_topology as sparse_lib
+from repro.core import stochastic_topology as stoch_lib
+from repro.core import topology as topo_lib
+from repro.kernels import ops as kernel_ops
+
+SIZES = (64, 256, 1024, 4096)
+D = 256                 # packed state width per client
+ETA_S, CORR = 0.5, 12.5
+
+
+def _synthetic(n: int, seed: int = 0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(k1, (n, D)) * 0.01,
+            jax.random.normal(k2, (n, D)),
+            jax.random.normal(k3, (n, D)) * 0.1)
+
+
+def _time_ms(fn, args, reps: int) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def _slope(ns, ms) -> float:
+    """log-log slope of cost vs n — 2.0 is the dense n² model, the sparse
+    exp-graph model is n·log n (slope ≈ 1 + log log corrections)."""
+    return float(np.polyfit(np.log(np.asarray(ns, float)),
+                            np.log(np.asarray(ms, float)), 1)[0])
+
+
+def run(csv=print) -> dict:
+    results: dict = {"D": D, "topology": "exp", "sparse": {}, "dense": {}}
+    sparse_pts, dense_pts = [], []
+    for n in SIZES:
+        sp = sparse_lib.sparse_exp(n)
+        delta, theta, c = _synthetic(n)
+        fn = jax.jit(lambda d, t, cc, s=sp: kernel_ops.sparse_gossip_round(
+            s.neighbor_idx, s.neighbor_w, s.self_w, d, t, cc, ETA_S, CORR,
+            backend="xla"))
+        ms = _time_ms(fn, (delta, theta, c), reps=10)
+        edges = sp.num_edges
+        csv(f"scale,impl=sparse_packed,n={n},edges={edges},"
+            f"max_deg={sp.max_degree},wall_ms={ms:.3f},D={D}")
+        results["sparse"][str(n)] = {
+            "edges": edges, "max_deg": sp.max_degree, "wall_ms": round(ms, 4)}
+        sparse_pts.append((n, ms))
+
+        if n <= 2 * stoch_lib.DENSE_MATERIALIZATION_LIMIT:
+            w = jnp.asarray(topo_lib.mixing_matrix("exp", n), jnp.float32)
+            fd = jax.jit(lambda d, t, cc, ww=w: kernel_ops.fused_gossip_round(
+                ww, d, t, cc, ETA_S, CORR, backend="xla"))
+            msd = _time_ms(fd, (delta, theta, c), reps=10)
+            csv(f"scale,impl=pallas_packed,n={n},edges={n * n},"
+                f"wall_ms={msd:.3f},D={D}")
+            results["dense"][str(n)] = {"wall_ms": round(msd, 4)}
+            dense_pts.append((n, msd))
+
+    results["sparse_loglog_slope"] = round(
+        _slope([p[0] for p in sparse_pts], [p[1] for p in sparse_pts]), 3)
+    if len(dense_pts) >= 2:
+        results["dense_loglog_slope"] = round(
+            _slope([p[0] for p in dense_pts], [p[1] for p in dense_pts]), 3)
+    # normalized: sparse μs per edge per round should be ~flat across n —
+    # the "cost scales with edge count, not n²" claim in one number
+    per_edge = {n: ms * 1e3 / results["sparse"][str(n)]["edges"]
+                for n, ms in sparse_pts}
+    results["sparse_us_per_edge"] = {
+        str(n): round(v, 4) for n, v in per_edge.items()}
+    csv(f"scale,sparse_loglog_slope={results['sparse_loglog_slope']},"
+        f"dense_loglog_slope={results.get('dense_loglog_slope')}")
+    results["subquadratic"] = results["sparse_loglog_slope"] < 1.7
+    return results
+
+
+def smoke(n: int = 256) -> int:
+    """Compile + run one sparse_packed round step at ``n`` with the clients
+    dim sharded over the available (fake) devices; exit 0 iff it runs and
+    the Σ_i c_i = 0 invariant holds."""
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import AlgorithmConfig
+    from repro.core import kgt_minimax as kgt
+    from repro.core import objectives
+
+    t0 = time.time()
+    ndev = len(jax.devices())
+    mesh = Mesh(np.asarray(jax.devices()), ("clients",))
+    k_steps = 2
+    data = objectives.make_quadratic_data(jax.random.PRNGKey(0), n, dx=8, dy=4)
+    problem = objectives.quadratic_problem(data)
+    algo = AlgorithmConfig(num_clients=n, local_steps=k_steps, topology="exp",
+                           mixing_impl="sparse_packed", eta_cx=0.05,
+                           eta_cy=0.05)
+    key = jax.random.PRNGKey(1)
+    batch1 = {k: data[k] for k in ("A", "B", "b", "q")}
+    batches = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (k_steps, *v.shape)), batch1)
+    state = kgt.init_state(problem, algo, key, init_batch=batch1,
+                           init_keys=jax.random.split(key, n))
+    shard = NamedSharding(mesh, P("clients"))
+    state = jax.device_put(
+        state, kgt.KGTState(x=shard, y=shard, cx=shard, cy=shard,
+                            round=NamedSharding(mesh, P())))
+    step = jax.jit(kgt.make_round_step(problem, algo))
+    keys = jax.random.split(key, k_steps * n).reshape(k_steps, n, 2)
+    state = step(state, batches, keys)
+    jax.block_until_ready(state.x)
+    cmean = float(kgt.correction_mean_norm(state.cx))
+    ok = cmean < 1e-3
+    print(f"[scale-smoke] sparse_packed round at n={n} on {ndev} devices: "
+          f"correction_mean_norm={cmean:.2e} "
+          f"({'ok' if ok else 'FAILED'}, {time.time() - t0:.1f}s)",
+          flush=True)
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="compile + one sharded sparse round at n=256")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ from benchmarks import (
     bench_gossip,
     bench_heterogeneity,
     bench_local_steps,
+    bench_scale,
     bench_speedup,
     bench_sweep,
     bench_topology,
@@ -39,6 +40,7 @@ BENCHES = {
     "speedup": bench_speedup.run,              # V5: linear speedup in n
     "churn": bench_churn.run,                  # V6: random topologies + participation
     "gossip": bench_gossip.run,                # round-epilogue lowerings
+    "scale": bench_scale.run,                  # sparse gossip: cost vs n (edges, not n²)
     "engine": bench_engine.run,                # host loop vs scanned chunks
     "sweep": bench_sweep.run,                  # sequential loop vs vmapped cell
     "roofline": roofline.run,                  # deliverable (g)

@@ -14,11 +14,16 @@
 #   4. repro.sweep.run smoke — a tiny 2-seed x 2-heterogeneity sweep
 #      end-to-end on the batched (vmapped-cell) path, including the
 #      results/sweeps/smoke.json store write.
-#   5. benchmarks.run gossip engine — the round-epilogue bench (collective
-#      counts per mixing_impl) and the engine bench (rounds/s: per-round
-#      host dispatch vs scanned chunks), merged into results/benchmarks.json.
-#      (`benchmarks.run sweep` runs the heavier batched-vs-sequential sweep
-#      bench; it is registered but not part of the smoke.)
+#   5. sparse-gossip smoke — compile + one mixing_impl=sparse_packed round
+#      at n=256 with the clients dim sharded over 4 fake devices, holding
+#      the Σc=0 tracking invariant (benchmarks.bench_scale --smoke).
+#   6. benchmarks.run gossip scale engine — the round-epilogue bench
+#      (collective counts per mixing_impl), the clients-axis scaling bench
+#      (sparse edge-proportional cost up to n=4096, sub-quadratic slope),
+#      and the engine bench (rounds/s: per-round host dispatch vs scanned
+#      chunks), merged into results/benchmarks.json.  (`benchmarks.run
+#      sweep` runs the heavier batched-vs-sequential sweep bench; it is
+#      registered but not part of the smoke.)
 #
 # Usage: scripts/smoke.sh [--archs ARCH ...]     (default: qwen2-0.5b)
 set -euo pipefail
@@ -65,7 +70,11 @@ python -m repro.launch.train --arch qwen2-0.5b --reduced --engine scan \
 echo "== tiny sweep end-to-end (batched cell + store write) =="
 python -m repro.sweep.run smoke
 
-echo "== gossip + engine benches (merged into results/benchmarks.json) =="
-python -m benchmarks.run gossip engine
+echo "== sparse-gossip smoke (one sparse_packed round at n=256, 4 fake devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+python -m benchmarks.bench_scale --smoke
+
+echo "== gossip + scale + engine benches (merged into results/benchmarks.json) =="
+python -m benchmarks.run gossip scale engine
 
 echo "smoke ok"

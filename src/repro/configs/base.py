@@ -201,10 +201,15 @@ class AlgorithmConfig:
     # "fused_dense"/"fused_ring" (pack Delta+params into one collective per
     # leaf), "pallas_packed" (ravel the whole state into one (n, D) buffer and
     # run the fused gossip/correction/mixing epilogue in a single pass —
-    # see repro.core.packing + repro.kernels.gossip).
+    # see repro.core.packing + repro.kernels.gossip), or "sparse_packed"
+    # (same fused packed epilogue, but W is padded-CSR neighbor lists and
+    # gossip is a neighbor-row gather — O(n·max_deg·D), never an (n, n)
+    # array; the scaling path for num_clients ≳ 512, see
+    # repro.core.sparse_topology + repro.kernels.neighbor_gossip).
     mixing_impl: str = "dense"
-    # Backend for the pallas_packed epilogue: "auto" (Pallas kernel on TPU,
-    # packed-xla oracle elsewhere), "pallas", "interpret", or "xla".
+    # Backend for the pallas_packed/sparse_packed epilogue: "auto" (Pallas
+    # kernel on TPU, packed-xla oracle elsewhere), "pallas", "interpret",
+    # or "xla".
     gossip_backend: str = "auto"
     gossip_dtype: str = "float32"   # beyond-paper: "bfloat16" halves gossip bytes
     # Inner optimizer applied to local steps ("sgd" is the faithful Algorithm 1).

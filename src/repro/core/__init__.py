@@ -22,7 +22,18 @@ from repro.core.objectives import (  # noqa: F401
     quadratic_cell_problem,
     quadratic_problem,
 )
+from repro.core.sparse_topology import (  # noqa: F401
+    SparseTopology,
+    densify,
+    from_dense,
+    make_sparse_w_sampler,
+    sparse_hierarchical,
+    sparse_masked_w,
+    sparse_mix,
+    sparse_mixing_matrix,
+)
 from repro.core.stochastic_topology import (  # noqa: F401
+    DENSE_MATERIALIZATION_LIMIT,
     TOPOLOGY_FAMILIES,
     bernoulli_mask,
     erdos_renyi_w,

@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.base import AlgorithmConfig
 from repro.core import mixing as mixing_lib
 from repro.core import packing
+from repro.core import sparse_topology as sparse_lib
 from repro.core import stochastic_topology as stoch_lib
 from repro.core import topology as topo_lib
 from repro.core.minimax import MinimaxProblem
@@ -189,6 +190,17 @@ def make_round_step(
     Σ_i c_i = 0 tracking invariant holds under any mask because the masked
     W stays doubly stochastic.  Extras order: ``round_step(state, batches,
     keys[, etas][, w][, mask])``.
+
+    With ``mixing_impl="sparse_packed"`` the mixing matrix is a
+    :class:`repro.core.sparse_topology.SparseTopology` everywhere a dense
+    (n, n) array would appear: ``w`` may be a ``SparseTopology`` (a dense
+    array is bridged via ``from_dense``; omitted, the support is built by
+    ``sparse_mixing_matrix(cfg.topology, n)``), the ``traced_w`` extra is a
+    ``SparseTopology`` pytree (see ``sparse_topology.make_sparse_w_sampler``),
+    participation masking applies ``sparse_masked_w`` to the neighbor lists,
+    and the round epilogue runs the neighbor-gather kernel
+    (``kernels.ops.sparse_gossip_round``) — O(n·max_deg·D) per round with no
+    (n, n) materialization anywhere.
     """
     if traced_etas and lr_scale is not None:
         raise ValueError(
@@ -207,11 +219,19 @@ def make_round_step(
         raise ValueError(
             "traced_w supplies W per round; topology_cycle would fight it — "
             "drop the cycle (sample the W sequence instead) or traced_w")
+    sparse = cfg.mixing_impl == "sparse_packed"
+    if cfg.topology_cycle and sparse:
+        # the cycle path stacks dense (n, n) members and indexes per round;
+        # sample a sparse W sequence (make_sparse_w_sampler) instead
+        raise ValueError(
+            "mixing_impl='sparse_packed' is not supported with "
+            "topology_cycle; sample a per-round SparseTopology via "
+            "sparse_topology.make_sparse_w_sampler and traced_w instead")
     dynamic_w = traced_w or participation
     packed = cfg.mixing_impl == "pallas_packed"
     pack_gd = (None if cfg.gossip_dtype in (None, "float32")
                else jnp.dtype(cfg.gossip_dtype))
-    if dynamic_w and not packed:
+    if dynamic_w and not packed and not sparse:
         # validates the impl (ring-style neighbor exchanges cannot realize a
         # per-round arbitrary W) and gives us mix(tree, w) with w traced
         traced_mix = mixing_lib.make_traced_mixer(
@@ -229,10 +249,17 @@ def make_round_step(
             return lambda tree: mixing_lib.mix_dense(tree, w_t, gossip_dtype=gd)
     else:
         if w is None and not traced_w:
-            w = topo_lib.mixing_matrix(cfg.topology, cfg.num_clients)
-        w_arr = None if w is None else jnp.asarray(w, jnp.float32)
+            w = (sparse_lib.sparse_mixing_matrix(cfg.topology, cfg.num_clients)
+                 if sparse
+                 else topo_lib.mixing_matrix(cfg.topology, cfg.num_clients))
+        if sparse:
+            w_arr = (None if w is None
+                     else (w if isinstance(w, sparse_lib.SparseTopology)
+                           else sparse_lib.from_dense(np.asarray(w))))
+        else:
+            w_arr = None if w is None else jnp.asarray(w, jnp.float32)
         get_w = lambda round_idx: w_arr
-        if packed or dynamic_w:
+        if packed or sparse or dynamic_w:
             make_mix = None  # W is consumed directly, per round
         else:
             static_mix = mixing_lib.make_mixer(
@@ -247,12 +274,13 @@ def make_round_step(
     def _round(state: KGTState, batches, keys,
                eta_cx, eta_cy, eta_sx, eta_sy, corr_x, corr_y,
                w_t=None, mask=None) -> KGTState:
-        if packed or dynamic_w:
+        if packed or sparse or dynamic_w:
             if w_t is None:
                 w_t = get_w(state.round)
             if mask is not None:
-                w_t = stoch_lib.masked_w(w_t, mask)
-            mix = (None if packed
+                w_t = (sparse_lib.sparse_masked_w(w_t, mask) if sparse
+                       else stoch_lib.masked_w(w_t, mask))
+            mix = (None if packed or sparse
                    else (lambda tree: traced_mix(tree, w_t)))
         else:
             mix = make_mix(state.round)
@@ -280,6 +308,46 @@ def make_round_step(
             # them and their mass never reaches active clients
             dx = _tree_mask_clients(mask, dx)
             dy = _tree_mask_clients(mask, dy)
+
+        if sparse:
+            # Sparse whole-state lowering: same fused epilogue as the packed
+            # branch below, but W is padded-CSR neighbor lists and the
+            # contraction is a neighbor-row gather — O(n·max_deg·D), no
+            # (n, n) array at any point.  See repro.kernels.neighbor_gossip.
+            spec_x = packing.pack_spec(state.x)
+            spec_y = packing.pack_spec(state.y)
+            if not track:
+                xb = sparse_lib.sparse_mix(
+                    w_t, packing.pack(state.x, spec_x)
+                    + eta_sx * packing.pack(dx, spec_x), gossip_dtype=pack_gd)
+                yb = sparse_lib.sparse_mix(
+                    w_t, packing.pack(state.y, spec_y)
+                    + eta_sy * packing.pack(dy, spec_y), gossip_dtype=pack_gd)
+                new_state = KGTState(
+                    x=packing.unpack(xb, spec_x), y=packing.unpack(yb, spec_y),
+                    cx=state.cx, cy=state.cy, round=state.round + 1)
+                return (new_state if mask is None
+                        else _freeze_inactive(mask, new_state, state))
+            spec_cx = packing.pack_spec(state.cx)
+            spec_cy = packing.pack_spec(state.cy)
+            xb, cxb = kernel_ops.sparse_gossip_round(
+                w_t.neighbor_idx, w_t.neighbor_w, w_t.self_w,
+                packing.pack(dx, spec_x), packing.pack(state.x, spec_x),
+                packing.pack(state.cx, spec_cx), eta_sx, corr_x,
+                backend=gossip_backend, gossip_dtype=cfg.gossip_dtype)
+            yb, cyb = kernel_ops.sparse_gossip_round(
+                w_t.neighbor_idx, w_t.neighbor_w, w_t.self_w,
+                packing.pack(dy, spec_y), packing.pack(state.y, spec_y),
+                packing.pack(state.cy, spec_cy), eta_sy, corr_y,
+                backend=gossip_backend, gossip_dtype=cfg.gossip_dtype)
+            new_state = KGTState(
+                x=packing.unpack(xb, spec_x),
+                y=packing.unpack(yb, spec_y),
+                cx=packing.unpack(cxb, spec_cx),
+                cy=packing.unpack(cyb, spec_cy),
+                round=state.round + 1)
+            return (new_state if mask is None
+                    else _freeze_inactive(mask, new_state, state))
 
         if packed:
             # Whole-state lowering: ravel each variable into one (n, D)

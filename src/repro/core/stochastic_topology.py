@@ -48,6 +48,22 @@ import numpy as np
 
 TOPOLOGY_FAMILIES = ("static", "erdos_renyi", "pairwise", "dropout")
 
+# Above this client count, materializing an (n, n) mixing matrix is a silent
+# O(n²) scaling bug — the sparse neighbor-list path exists precisely so that
+# per-round cost grows with edge count instead.  The dense samplers raise at
+# trace time (n is static) rather than quietly allocating.
+DENSE_MATERIALIZATION_LIMIT = 512
+
+
+def check_dense_materialization(n: int, what: str) -> None:
+    """Raise if ``what`` would materialize an (n, n) array past the limit."""
+    if n > DENSE_MATERIALIZATION_LIMIT:
+        raise ValueError(
+            f"{what} would materialize a dense ({n}, {n}) mixing matrix "
+            f"(limit {DENSE_MATERIALIZATION_LIMIT}); use "
+            f"repro.core.sparse_topology / mixing_impl='sparse_packed' "
+            f"for large client counts")
+
 # fold_in stream ids separating the W draw from the participation-mask draw
 # (the data sampler's streams are the raw per-round key and 999; these are
 # disjoint by construction since they fold a second constant).
@@ -87,6 +103,7 @@ def erdos_renyi_w(key, n: int, edge_prob) -> jnp.ndarray:
 
     ``edge_prob`` may be traced (uniform-threshold sampling).
     """
+    check_dense_materialization(n, "erdos_renyi_w")
     u = jax.random.uniform(key, (n, n))
     upper = jnp.triu(u < edge_prob, k=1)
     return metropolis_weights(upper | upper.T)
@@ -116,6 +133,7 @@ def masked_w(w, mask) -> jnp.ndarray:
     """
     w = jnp.asarray(w, jnp.float32)
     n = w.shape[0]
+    check_dense_materialization(n, "masked_w")
     m = mask.astype(jnp.float32)
     off = w * (1.0 - jnp.eye(n, dtype=jnp.float32)) * m[:, None] * m[None, :]
     return off + jnp.diag(1.0 - off.sum(1))

@@ -1,0 +1,111 @@
+"""Sparse neighbor-gather gossip-epilogue Pallas kernel.
+
+The dense kernel in ``kernels/gossip.py`` contracts the full ``(n, n)``
+mixing matrix against each ``(n, BD)`` state tile — O(n²·D) work and O(n²)
+VMEM for W, which caps the clients axis.  On a sparse topology W has only
+``deg_i`` non-zeros per row, so this kernel computes the same Algorithm-1
+round epilogue
+
+    WΔ    = Σ_slot w[:, slot] · Δ[idx[:, slot]]     (neighbor-row gather)
+    Wθ    = Σ_slot w[:, slot] · θ[idx[:, slot]]
+    θ_new = Wθ + η_s · WΔ
+    c_new = c + s · (Δ − WΔ)                        (s = ±1/(K·η_c))
+
+by gathering neighbor rows from the packed ``(n, BD)`` tile — O(n·m·D)
+work with ``m = max_degree + 1`` slots.  The wrapper
+(``ops.sparse_gossip_round``) prepends an *augmented self slot*
+(idx = own row, weight = w_ii), so the kernel body is one uniform
+gather-axpy loop with no special diagonal case; padding slots carry
+weight 0.0 and contribute exact zeros.
+
+The slot loop is unrolled at trace time (m is static and small — ~2·log₂ n
+for the exponential graph), each iteration a rank-1-in-slot broadcast
+multiply on the VPU plus a dynamic row gather.
+
+``gossip_dtype`` narrows the *operands* (weights and gathered values) and
+accumulates in f32 — matching the MXU's exact-product bf16×bf16→f32
+semantics of the dense kernel, so sparse and dense agree to accumulation
+order.  Scalars (η_s, s) and the int32 neighbor table ride in via scalar
+prefetch: the scalars are traced (lr schedule), and the indices must be
+available to address generation ahead of the tile fetch.
+
+TPU caveats (this container validates in interpret mode): the ``(n, m)``
+int32 table lives in SMEM — at n=4096, m=25 that is ~400 KiB, near the
+1 MiB SMEM budget, so very-large-n compiles may need the table split
+across a client-axis grid; and per-row dynamic gathers lower to VMEM
+dynamic slices, which Mosaic only supports on the sublane axis.  Callers
+go through ``ops.sparse_gossip_round``, which pads n to the sublane
+multiple and D to the lane/block multiple and slices back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, nidx_ref, nw_ref, delta_ref, theta_ref, c_ref,
+            theta_out_ref, c_out_ref, *, gossip_dtype):
+    eta_s = s_ref[0]
+    corr_scale = s_ref[1]
+    d32 = delta_ref[...].astype(jnp.float32)        # (N, BD)
+    if gossip_dtype is None:
+        dg, tg = d32, theta_ref[...].astype(jnp.float32)
+        nw = nw_ref[...].astype(jnp.float32)        # (N, M)
+    else:
+        dg = delta_ref[...].astype(gossip_dtype)
+        tg = theta_ref[...].astype(gossip_dtype)
+        nw = nw_ref[...].astype(gossip_dtype)
+    m = nw.shape[1]
+    wd = jnp.zeros(d32.shape, jnp.float32)
+    wt = jnp.zeros(d32.shape, jnp.float32)
+    for slot in range(m):                           # static unroll
+        idx = nidx_ref[:, slot]                     # (N,) int32, SMEM
+        w_s = nw[:, slot].astype(jnp.float32)[:, None]
+        wd = wd + w_s * jnp.take(dg, idx, axis=0).astype(jnp.float32)
+        wt = wt + w_s * jnp.take(tg, idx, axis=0).astype(jnp.float32)
+    theta_out_ref[...] = (wt + eta_s * wd).astype(theta_out_ref.dtype)
+    c_out_ref[...] = (c_ref[...].astype(jnp.float32)
+                      + corr_scale * (d32 - wd)).astype(c_out_ref.dtype)
+
+
+def sparse_gossip_nd(neighbor_idx, neighbor_w, delta, theta, c, scalars, *,
+                     block_d: int = 512, gossip_dtype=None,
+                     interpret: bool = True):
+    """neighbor_idx/neighbor_w: (N, M) *augmented* slots (slot 0 = self);
+    delta/theta/c: (N, D) with N a sublane multiple and D a ``block_d``
+    multiple (padding handled by ``ops.sparse_gossip_round``); scalars:
+    (2,) f32 = [η_s, corr_scale].  Returns (θ_new, c_new) f32."""
+    n, d = delta.shape
+    m = neighbor_idx.shape[1]
+    assert neighbor_idx.shape == (n, m) and neighbor_w.shape == (n, m)
+    assert theta.shape == c.shape == (n, d)
+    block_d = min(block_d, d)
+    assert d % block_d == 0, (d, block_d)
+
+    kernel = functools.partial(_kernel, gossip_dtype=gossip_dtype)
+    # index maps receive (grid indices, *scalar prefetch refs)
+    tile = lambda i, *_: (0, i)
+    out_sds = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,                   # scalars, neighbor_idx
+            grid=(d // block_d,),
+            in_specs=[
+                pl.BlockSpec((n, m), lambda i, *_: (0, 0)),  # weights
+                pl.BlockSpec((n, block_d), tile),            # Δ
+                pl.BlockSpec((n, block_d), tile),            # θ
+                pl.BlockSpec((n, block_d), tile),            # c
+            ],
+            out_specs=[
+                pl.BlockSpec((n, block_d), tile),            # θ_new
+                pl.BlockSpec((n, block_d), tile),            # c_new
+            ],
+        ),
+        out_shape=[out_sds, out_sds],
+        interpret=interpret,
+    )(scalars, neighbor_idx, neighbor_w, delta, theta, c)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import gossip as gossip_lib
+from repro.kernels import neighbor_gossip as ngossip_lib
 from repro.kernels import ref as ref_lib
 from repro.kernels import rglru_scan as rg
 from repro.kernels import ssd_scan as ssd
@@ -134,6 +135,55 @@ def fused_gossip_round(w, delta, theta, c, eta_s, corr_scale, *,
     scalars = jnp.stack([eta_s, corr_scale])
     theta_new, c_new = gossip_lib.fused_gossip_nd(
         wp, prep(delta), prep(theta), prep(c), scalars, block_d=blk,
+        gossip_dtype=gd, interpret=(backend == "interpret"))
+    return theta_new[:n, :d], c_new[:n, :d]
+
+
+@partial(jax.jit, static_argnames=("backend", "block_d", "gossip_dtype"))
+def sparse_gossip_round(neighbor_idx, neighbor_w, self_w, delta, theta, c,
+                        eta_s, corr_scale, *, backend: str = "interpret",
+                        block_d: int = 512, gossip_dtype=None):
+    """Fused round epilogue over packed client state, sparse W.
+
+    neighbor_idx: (n, max_deg) int32 padded-CSR neighbor lists (padding =
+    own index); neighbor_w: (n, max_deg) with padding weight 0; self_w:
+    (n,) diagonal; delta/theta/c: (n, D).  Returns f32
+    (θ_new, c_new) = (Wθ + η_s·WΔ, c + corr_scale·(Δ − WΔ)) — the same
+    contract as ``fused_gossip_round`` at O(n·max_deg·D) instead of
+    O(n²·D).  Raw arrays, not a ``SparseTopology``: callers unpack the
+    pytree so the kernels package stays free of core imports.
+
+    The pallas/interpret path prepends the augmented self slot (slot 0 =
+    own row at weight w_ii), pads n to the f32 sublane multiple (padded
+    rows gather row 0 at weight 0.0 — contribute nothing) and D to the
+    block multiple, and slices back to (n, D).
+    """
+    gd = (None if gossip_dtype in (None, "float32")
+          else jnp.dtype(gossip_dtype))
+    eta_s = jnp.float32(eta_s)
+    corr_scale = jnp.float32(corr_scale)
+    if backend == "xla":
+        return ref_lib.sparse_gossip_ref(
+            neighbor_idx, neighbor_w, self_w, delta, theta, c, eta_s,
+            corr_scale, gossip_dtype=gd)
+    n, d = delta.shape
+    own = jnp.arange(n, dtype=jnp.int32)[:, None]
+    aidx = jnp.concatenate([own, neighbor_idx.astype(jnp.int32)], axis=1)
+    aw = jnp.concatenate(
+        [self_w.astype(jnp.float32)[:, None],
+         neighbor_w.astype(jnp.float32)], axis=1)
+    aidx, _ = _pad_to(aidx, 0, 8)
+    aw, _ = _pad_to(aw, 0, 8)
+    blk = min(block_d, max(128, -(-d // 128) * 128))
+
+    def prep(x):
+        x, _ = _pad_to(x.astype(jnp.float32), 0, 8)
+        x, _ = _pad_to(x, 1, blk)
+        return x
+
+    scalars = jnp.stack([eta_s, corr_scale])
+    theta_new, c_new = ngossip_lib.sparse_gossip_nd(
+        aidx, aw, prep(delta), prep(theta), prep(c), scalars, block_d=blk,
         gossip_dtype=gd, interpret=(backend == "interpret"))
     return theta_new[:n, :d], c_new[:n, :d]
 

@@ -85,6 +85,42 @@ def fused_gossip_ref(w, delta, theta, c, eta_s, corr_scale, *,
     return theta_new, c_new
 
 
+def sparse_gossip_ref(neighbor_idx, neighbor_w, self_w, delta, theta, c,
+                      eta_s, corr_scale, *, gossip_dtype=None):
+    """Sparse (neighbor-list) round-epilogue oracle — same epilogue as
+    ``fused_gossip_ref`` with W given in padded-CSR form.
+
+    neighbor_idx: (n, m) int32 (padding = own index); neighbor_w: (n, m)
+    with padding weight 0; self_w: (n,) diagonal; delta/theta/c: (n, D).
+    Raw arrays (not a ``SparseTopology``) so the kernels package stays free
+    of core imports.  Mirrors the dense oracle's dtype rules: weights and
+    communicated values narrow to ``gossip_dtype``, products accumulate in
+    f32, Δ stays f32 inside the correction.
+    """
+    d32 = delta.astype(jnp.float32)
+    t32 = theta.astype(jnp.float32)
+    if gossip_dtype is None:
+        dg, tg = d32, t32
+        nwg = neighbor_w.astype(jnp.float32)
+        swg = self_w.astype(jnp.float32)
+    else:
+        dg = d32.astype(gossip_dtype)
+        tg = t32.astype(gossip_dtype)
+        nwg = neighbor_w.astype(gossip_dtype)
+        swg = self_w.astype(gossip_dtype)
+
+    def spmv(x):
+        gathered = jnp.take(x, neighbor_idx, axis=0)        # (n, m, D)
+        return (swg.astype(jnp.float32)[:, None] * x.astype(jnp.float32)
+                + jnp.einsum("nm,nmd->nd", nwg, gathered,
+                             preferred_element_type=jnp.float32))
+
+    wd = spmv(dg)
+    theta_new = spmv(tg) + eta_s * wd
+    c_new = c.astype(jnp.float32) + corr_scale * (d32 - wd)
+    return theta_new, c_new
+
+
 def rglru_ref(a, u):
     """Token-by-token h_t = a_t h_{t-1} + u_t.  a, u: (B,S,W)."""
 

@@ -78,6 +78,23 @@ def smoke_arch(arch: str) -> bool:
         print(f"[smoke] {arch}: packed train FAILED: {type(e).__name__}: {e}",
               flush=True)
 
+    # the sparse neighbor-gather round must also lower under GSPMD — same
+    # fused epilogue with W as padded-CSR neighbor lists instead of an
+    # (n, n) matrix (repro.core.sparse_topology / kernels.neighbor_gossip)
+    t0 = time.time()
+    sparse_algo = dataclasses.replace(algo, mixing_impl="sparse_packed")
+    try:
+        with compat.use_mesh(mesh):
+            jitted, state_sds, batch_sds, key_sds, _ = steps_lib.build_train_round(
+                cfg, TRAIN_SHAPE, mesh, mcfg, algo=sparse_algo)
+            jitted.lower(state_sds, batch_sds, key_sds).compile()
+        print(f"[smoke] {arch}: sparse-gossip train round compiled "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    except Exception as e:
+        ok = False
+        print(f"[smoke] {arch}: sparse train FAILED: {type(e).__name__}: {e}",
+              flush=True)
+
     # the scanned engine chunk (repro.engine execution model): R rounds as
     # one program with device-side sampling + metrics buffer, donated
     # sharded state — the hot path of launch/train --engine scan on a mesh

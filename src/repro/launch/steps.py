@@ -49,11 +49,13 @@ def _train_parts(
     their shardings."""
     algo = algo or AlgorithmConfig(num_clients=mcfg.num_clients)
     algo = dataclasses.replace(algo, num_clients=mcfg.num_clients)
-    if algo.mixing_impl == "pallas_packed" and algo.gossip_backend == "auto":
+    if (algo.mixing_impl in ("pallas_packed", "sparse_packed")
+            and algo.gossip_backend == "auto"):
         # Under GSPMD the clients dim is mesh-sharded and pallas_call is not
         # SPMD-partitioned over it; the packed-xla oracle keeps the
-        # one-collective-per-variable lowering, which is the win at mesh
-        # scale.  The Pallas kernel itself is the single-chip epilogue path.
+        # one-collective-per-variable lowering (gather-based for sparse),
+        # which is the win at mesh scale.  The Pallas kernels themselves are
+        # the single-chip epilogue path.
         algo = dataclasses.replace(algo, gossip_backend="xla")
     minimax = minimax or MinimaxConfig()
     n, k_steps = algo.num_clients, algo.local_steps

@@ -36,6 +36,7 @@ from repro.configs.base import AlgorithmConfig, MinimaxConfig
 from repro.core import kgt_minimax as kgt
 from repro.core import mixing as mixing_lib
 from repro.core import objectives, topology
+from repro.core import sparse_topology as sparse_lib
 from repro.core import stochastic_topology as stoch_lib
 from repro.data import synthetic as data_lib
 from repro.optim import schedules
@@ -155,12 +156,24 @@ def train(args) -> dict:
         topo_key = jax.random.PRNGKey(algo.topology_seed)
         w_fn = None
         if random_w:
-            base_w = (topology.mixing_matrix(algo.topology, algo.num_clients)
-                      if algo.topology_family == "dropout" else None)
-            w_fn = stoch_lib.make_w_sampler(
-                algo.topology_family, algo.num_clients, topo_key,
-                base_w=base_w, edge_prob=algo.edge_prob,
-                client_drop_prob=algo.client_drop_prob)
+            if algo.mixing_impl == "sparse_packed":
+                # the sampled W rides the extras slot as a SparseTopology
+                # pytree drawn on the support graph's neighbor lists —
+                # no (n, n) array anywhere on the churn path
+                support = sparse_lib.sparse_mixing_matrix(
+                    algo.topology, algo.num_clients)
+                w_fn = sparse_lib.make_sparse_w_sampler(
+                    algo.topology_family, support, topo_key,
+                    edge_prob=algo.edge_prob,
+                    client_drop_prob=algo.client_drop_prob)
+            else:
+                base_w = (topology.mixing_matrix(algo.topology,
+                                                 algo.num_clients)
+                          if algo.topology_family == "dropout" else None)
+                w_fn = stoch_lib.make_w_sampler(
+                    algo.topology_family, algo.num_clients, topo_key,
+                    base_w=base_w, edge_prob=algo.edge_prob,
+                    client_drop_prob=algo.client_drop_prob)
         mask_fn = None
         if part:
             mask_fn = stoch_lib.make_participation_sampler(
@@ -195,6 +208,13 @@ def train(args) -> dict:
                         if algo.topology_family == "erdos_renyi" else "")
                      + (f" (drop={algo.client_drop_prob})"
                         if algo.topology_family == "dropout" else ""))
+    elif (algo.mixing_impl == "sparse_packed"
+          and algo.num_clients > stoch_lib.DENSE_MATERIALIZATION_LIMIT):
+        # densifying just to report an eigengap defeats the sparse path
+        support = sparse_lib.sparse_mixing_matrix(
+            algo.topology, algo.num_clients)
+        topo_part = (f"{algo.topology} (sparse, "
+                     f"max_deg={support.max_degree})")
     else:
         w = topology.mixing_matrix(algo.topology, algo.num_clients)
         topo_part = f"p={topology.spectral_gap(w):.3f}"

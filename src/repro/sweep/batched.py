@@ -205,7 +205,8 @@ def make_quadratic_traj_sampler(*, local_steps: int, num_clients: int):
 
 def make_churn_traj_sampler(*, local_steps: int, num_clients: int,
                             family: str, base_w=None,
-                            participation: bool = False):
+                            participation: bool = False,
+                            sparse_support=None):
     """:func:`make_quadratic_traj_sampler` plus the churn draws: each round
     also samples the mixing matrix (``family`` ≠ "static") and/or the
     participation mask from the trajectory's traced ``topo`` bundle.
@@ -217,7 +218,15 @@ def make_churn_traj_sampler(*, local_steps: int, num_clients: int,
     ``stochastic_topology.round_stream_key`` — pure in the round index —
     which is what keeps the vmapped cell bit-identical to the sequential
     reference and checkpoint restores exact.
+
+    With ``sparse_support`` (a host-concrete
+    ``repro.core.sparse_topology.SparseTopology``) the W draw goes through
+    ``make_sparse_w_sampler`` on that support instead — the extras slot
+    carries a ``SparseTopology`` pytree, never an (n, n) array, matching a
+    ``mixing_impl="sparse_packed"`` round step.  ``base_w`` is ignored on
+    that path (the support *is* the base topology).
     """
+    from repro.core import sparse_topology as sparse
     from repro.core import stochastic_topology as stoch
 
     if family not in stoch.TOPOLOGY_FAMILIES:
@@ -234,10 +243,16 @@ def make_churn_traj_sampler(*, local_steps: int, num_clients: int,
         tkey = jax.random.PRNGKey(topo["seed"])
         extras = []
         if family != "static":
-            w_fn = stoch.make_w_sampler(
-                family, num_clients, tkey, base_w=base_w,
-                edge_prob=topo["edge_prob"],
-                client_drop_prob=topo["drop_prob"])
+            if sparse_support is not None:
+                w_fn = sparse.make_sparse_w_sampler(
+                    family, sparse_support, tkey,
+                    edge_prob=topo["edge_prob"],
+                    client_drop_prob=topo["drop_prob"])
+            else:
+                w_fn = stoch.make_w_sampler(
+                    family, num_clients, tkey, base_w=base_w,
+                    edge_prob=topo["edge_prob"],
+                    client_drop_prob=topo["drop_prob"])
             extras.append(w_fn(round_idx))
         if participation:
             extras.append(stoch.bernoulli_mask(

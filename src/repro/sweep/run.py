@@ -34,6 +34,7 @@ from repro.core import (
     mixing_matrix,
     point_etas,
     quadratic_cell_problem,
+    sparse_mixing_matrix,
 )
 from repro.sweep import batched as batched_lib
 from repro.sweep import grid as grid_lib
@@ -181,11 +182,23 @@ def _cell_programs(p: Dict[str, Any], *, batched: bool, mesh=None,
     round_step = make_round_step(problem, _cfg(p), traced_etas=True,
                                  traced_w=random_w, participation=part)
     if random_w or part:
-        base_w = (mixing_matrix(p["topology"], p["n"])
-                  if p["topology_family"] in ("static", "dropout") else None)
-        sampler = batched_lib.make_churn_traj_sampler(
-            local_steps=p["K"], num_clients=p["n"],
-            family=p["topology_family"], base_w=base_w, participation=part)
+        if p["mixing_impl"] == "sparse_packed":
+            # the W extras slot carries a SparseTopology pytree — the draw
+            # happens on the neighbor lists of the configured support graph,
+            # never through an (n, n) array
+            support = sparse_mixing_matrix(p["topology"], p["n"])
+            sampler = batched_lib.make_churn_traj_sampler(
+                local_steps=p["K"], num_clients=p["n"],
+                family=p["topology_family"], participation=part,
+                sparse_support=support)
+        else:
+            base_w = (mixing_matrix(p["topology"], p["n"])
+                      if p["topology_family"] in ("static", "dropout")
+                      else None)
+            sampler = batched_lib.make_churn_traj_sampler(
+                local_steps=p["K"], num_clients=p["n"],
+                family=p["topology_family"], base_w=base_w,
+                participation=part)
     else:
         sampler = batched_lib.make_quadratic_traj_sampler(
             local_steps=p["K"], num_clients=p["n"])

@@ -216,5 +216,7 @@ def test_steps_compile_on_cpu_fake_mesh():
         env=env, capture_output=True, text=True, timeout=540)
     assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
     assert "train round compiled" in proc.stdout
+    assert "packed-gossip train round compiled" in proc.stdout
+    assert "sparse-gossip train round compiled" in proc.stdout
     assert "sweep cell" in proc.stdout and "compiled" in proc.stdout
     assert "prefill+decode compiled" in proc.stdout

@@ -184,7 +184,8 @@ def check_round_mean_dynamics(algo, n, k, seed, mixing_impl="dense"):
 
 
 @pytest.mark.parametrize("algo", ["kgt_minimax", "dsgda", "local_sgda", "gt_gda"])
-@pytest.mark.parametrize("mixing_impl", ["dense", "pallas_packed"])
+@pytest.mark.parametrize("mixing_impl", ["dense", "pallas_packed",
+                                         "sparse_packed"])
 def test_round_mean_dynamics_under_random_doubly_stochastic_w(algo, mixing_impl):
     """Deterministic cousin of the hypothesis property in test_property.py
     (which runs everywhere since the bundled fallback landed)."""
@@ -198,6 +199,7 @@ def check_participation_invariants(algo, n, k, seed, mask_bits,
     masked W stays doubly stochastic, so x̄ moves by η_s·mean(masked Δ)
     whatever W was drawn), Σ_i c_i stays 0 under ANY mask, and inactive
     clients' (θ, c) are frozen bit-exactly."""
+    from repro.core import sparse_topology as sparse
     from repro.core import stochastic_topology as stoch
 
     mask = jnp.asarray([(mask_bits >> i) & 1 == 1 for i in range(n)])
@@ -214,14 +216,19 @@ def check_participation_invariants(algo, n, k, seed, mask_bits,
                     init_keys=jax.random.split(key, n))
     step = jax.jit(make_round_step(prob, cfg, traced_w=True,
                                    participation=True))
-    w_j = jnp.full((n, n), 1.0 / n, jnp.float32)
+    # the sparse_packed traced-W operand is a SparseTopology pytree; the
+    # dense Ws here are fully connected, so from_dense keeps every edge
+    bridge = (sparse.from_dense if mixing_impl == "sparse_packed"
+              else lambda a: jnp.asarray(a, jnp.float32))
+    w_t = bridge(np.asarray(w, np.float32))
+    w_j = bridge(np.full((n, n), 1.0 / n, np.float32))
     st_w = st
     inactive = ~np.asarray(mask)
     for t in range(rounds):
         keys = jax.random.split(jax.random.PRNGKey(seed + t),
                                 k * n).reshape(k, n, 2)
         prev_w = st_w
-        st_w = step(st_w, kb, keys, jnp.asarray(w, jnp.float32), mask)
+        st_w = step(st_w, kb, keys, w_t, mask)
         if t == 0:
             # W-independence of the mean is a ONE-round property from a
             # common state (after a round the per-client spread differs, so
@@ -245,7 +252,8 @@ def check_participation_invariants(algo, n, k, seed, mask_bits,
 
 
 @pytest.mark.parametrize("algo", ["kgt_minimax", "dsgda", "local_sgda", "gt_gda"])
-@pytest.mark.parametrize("mixing_impl", ["dense", "pallas_packed"])
+@pytest.mark.parametrize("mixing_impl", ["dense", "pallas_packed",
+                                         "sparse_packed"])
 def test_participation_invariants_all_variants(algo, mixing_impl):
     """Deterministic cousin of the participation hypothesis properties in
     test_property.py: a mask dropping clients 1 and 3 of 6."""

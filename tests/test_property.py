@@ -6,6 +6,8 @@ installed (the ``[dev]`` extra), else on the bundled deterministic fallback
 the strategy subset it implements.  scripts/smoke.sh fails CI if this file
 collects zero tests or reports any skip.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -65,6 +67,134 @@ def test_correction_sum_invariant(n, k, het, sigma):
     for c in (stt.cx, stt.cy):
         mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
         assert float(jnp.abs(mean_c).max()) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# sparse neighbor-gather gossip at scale (n = 1024)
+# ---------------------------------------------------------------------------
+# The scaling claim of the sparse tentpole: the SAME invariants the dense
+# suite pins above must hold on the sparse_packed path at a client count
+# where the dense path would refuse to materialize W.  One shared compiled
+# step (lru_cache) keeps the n=1024 cost to a single trace per topology
+# shape; example counts stay small because each example runs real rounds
+# over 1024 clients.
+
+N_SCALE = 1024
+
+
+@functools.lru_cache(maxsize=1)
+def _sparse_scale_setup():
+    from repro.core import sparse_topology as sparse
+
+    n, k = N_SCALE, 2
+    key = jax.random.PRNGKey(0)
+    data = make_quadratic_data(key, n, dx=4, dy=2, heterogeneity=1.5)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, eta_sx=0.4, eta_sy=0.4,
+                          topology="exp", mixing_impl="sparse_packed",
+                          gossip_backend="xla")
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = jax.jit(make_round_step(prob, cfg, traced_w=True,
+                                   participation=True))
+    return n, k, stt, step, kb, sparse.sparse_exp(n)
+
+
+def _sum_c_small(stt, tol=1e-3):
+    # n=1024 f32 client means accumulate more rounding than the n≤8 suite;
+    # Σc stays orders of magnitude under the tracking signal either way
+    for c in (stt.cx, stt.cy):
+        mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
+        assert float(jnp.abs(mean_c).max()) < tol
+
+
+@given(family=st.sampled_from(["erdos_renyi", "dropout", "pairwise"]),
+       edge_prob=st.floats(0.2, 0.9), drop=st.floats(0.0, 0.5),
+       seed=st.integers(0, 50))
+@settings(max_examples=4, deadline=None)
+def test_sparse_scale_sum_c_and_freeze_n1024(family, edge_prob, drop, seed):
+    """Σ_i c_i = 0 and bit-exact inactive-client freeze on the sparse path
+    at n=1024, under per-round sampled sparse Ws (every family, so the
+    realized degree distribution varies per example) and Bernoulli
+    participation masks."""
+    from repro.core import sparse_topology as sparse
+
+    n, k, stt, step, kb, support = _sparse_scale_setup()
+    w_fn = sparse.make_sparse_w_sampler(
+        family, support, jax.random.PRNGKey(seed), edge_prob=edge_prob,
+        client_drop_prob=drop)
+    mask_fn = stoch.make_participation_sampler(n, jax.random.PRNGKey(seed),
+                                               1.0 - drop)
+    for t in range(2):
+        keys = jax.random.split(jax.random.PRNGKey(seed + t),
+                                k * n).reshape(k, n, 2)
+        mask = mask_fn(jnp.int32(t))
+        prev = stt
+        stt = step(stt, kb, keys, w_fn(jnp.int32(t)), mask)
+        inactive = ~np.asarray(mask)
+        for name in ("x", "y", "cx", "cy"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(stt, name))[inactive],
+                np.asarray(getattr(prev, name))[inactive], err_msg=name)
+        _sum_c_small(stt)
+
+
+@given(seed=st.integers(0, 100), r_a=st.integers(0, 500),
+       r_b=st.integers(501, 1000))
+@settings(max_examples=3, deadline=None)
+def test_sparse_scale_mean_dynamics_w_independent_n1024(seed, r_a, r_b):
+    """From a common state, one round under two DIFFERENT sparse W draws
+    moves the client mean identically — the W-independence of the mean
+    dynamics, at a scale where W is never materialized."""
+    from repro.core import sparse_topology as sparse
+
+    n, k, stt, step, kb, support = _sparse_scale_setup()
+    w_fn = sparse.make_sparse_w_sampler(
+        "erdos_renyi", support, jax.random.PRNGKey(seed), edge_prob=0.6)
+    ones = jnp.ones((n,), bool)
+    keys = jax.random.split(jax.random.PRNGKey(seed), k * n).reshape(k, n, 2)
+    out_a = step(stt, kb, keys, w_fn(jnp.int32(r_a)), ones)
+    out_b = step(stt, kb, keys, w_fn(jnp.int32(r_b)), ones)
+    np.testing.assert_allclose(mean_over_clients(out_a.x),
+                               mean_over_clients(out_b.x),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(mean_over_clients(out_a.y),
+                               mean_over_clients(out_b.y),
+                               rtol=1e-4, atol=1e-4)
+    _sum_c_small(out_a)
+
+
+@given(topo=st.sampled_from(["ring", "torus", "exp", "hierarchical"]),
+       seed=st.integers(0, 50))
+@settings(max_examples=4, deadline=None)
+def test_sparse_scale_static_topologies_n1024(topo, seed):
+    """Structured degree distributions at n=1024 (constant-degree ring and
+    torus, log-degree exp graph, two-tier hierarchical): one sparse round
+    holds Σc = 0.  1024 = 32², so every family exists at this n."""
+    from repro.core import sparse_topology as sparse
+
+    n, k, stt, step, kb, _ = _sparse_scale_setup()
+    sp = (sparse.sparse_hierarchical(n, cluster_size=32)
+          if topo == "hierarchical" else sparse.sparse_mixing_matrix(topo, n))
+    ones = jnp.ones((n,), bool)
+    keys = jax.random.split(jax.random.PRNGKey(seed), k * n).reshape(k, n, 2)
+    _sum_c_small(step(stt, kb, keys, sp, ones))
+
+
+@given(n=st.sampled_from([2, 4, 8]), mask_bits=st.integers(0, 2**8 - 1),
+       seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_participation_invariants_sparse_engine(n, mask_bits, seed):
+    """The small-n cousin: the full check_participation_invariants battery
+    (mean dynamics vs W=J, Σc, bit-exact freeze) through sparse_packed."""
+    from test_kgt import check_participation_invariants
+
+    check_participation_invariants("kgt_minimax", n=n, k=2, seed=seed,
+                                   mask_bits=mask_bits,
+                                   mixing_impl="sparse_packed")
 
 
 @given(n=st.integers(2, 20))

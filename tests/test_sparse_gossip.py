@@ -1,0 +1,438 @@
+"""Parity + invariant suite for the sparse neighbor-gather gossip path.
+
+The padded-CSR topology (``core.sparse_topology``) and the neighbor-gather
+round epilogue (``kernels.neighbor_gossip`` via ``ops.sparse_gossip_round``)
+must reproduce the dense path bit-for-bit where exactness is claimed
+(densify/from_dense round trips) and to ≤1e-6 elsewhere (kernel vs dense
+oracle, masked mixing, full-round trajectories) — across topology families,
+participation masks, and gossip dtypes.  The dense-materialization guard in
+``stochastic_topology`` is pinned here too: past n=512 the dense samplers
+must refuse loudly instead of silently allocating (n, n).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AlgorithmConfig
+from repro.core import (
+    init_state,
+    make_quadratic_data,
+    make_round_step,
+    mean_over_clients,
+    quadratic_problem,
+)
+from repro.core import sparse_topology as sparse
+from repro.core import stochastic_topology as stoch
+from repro.core import topology
+
+# every named topology has a sparse twin; torus needs square n
+TOPO_CLIENTS = (("ring", 2), ("ring", 5), ("ring", 8), ("torus", 9),
+                ("torus", 16), ("exp", 8), ("exp", 12), ("full", 8),
+                ("star", 8))
+
+
+def _operands(n, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    delta = jax.random.normal(ks[0], (n, d), jnp.float32)
+    theta = jax.random.normal(ks[1], (n, d), jnp.float32) * 3.0
+    c = jax.random.normal(ks[2], (n, d), jnp.float32) * 0.5
+    return delta, theta, c
+
+
+# ---------------------------------------------------------------------------
+# constructors: sparse twins of the dense topologies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo,n", TOPO_CLIENTS)
+def test_sparse_constructors_match_dense(topo, n):
+    """densify(sparse_<topo>(n)) reproduces topology.mixing_matrix — the
+    Metropolis–Hastings weights coincide with the dense constructors on
+    every named family."""
+    w_sparse = sparse.densify(sparse.sparse_mixing_matrix(topo, n))
+    w_dense = np.asarray(topology.mixing_matrix(topo, n), np.float32)
+    np.testing.assert_allclose(np.asarray(w_sparse), w_dense,
+                               rtol=0, atol=1e-7)
+
+
+@pytest.mark.parametrize("topo,n", TOPO_CLIENTS)
+def test_densify_from_dense_bit_roundtrip(topo, n):
+    """from_dense → densify is bit-exact: padding slots carry weight 0.0
+    and scatter-add of exact zeros changes nothing."""
+    w = jnp.asarray(topology.mixing_matrix(topo, n), jnp.float32)
+    sp = sparse.from_dense(np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(sparse.densify(sp)),
+                                  np.asarray(w))
+
+
+def test_from_dense_roundtrip_random_doubly_stochastic():
+    from test_kgt import doubly_stochastic_w
+
+    w = np.asarray(doubly_stochastic_w(10, seed=3), np.float32)
+    sp = sparse.from_dense(w)
+    np.testing.assert_array_equal(np.asarray(sparse.densify(sp)), w)
+    assert sp.max_degree == 9 and sp.num_edges == 10 * 9
+
+
+def test_sparse_torus_rejects_nonsquare():
+    with pytest.raises(ValueError, match="square"):
+        sparse.sparse_torus(8)
+
+
+def test_sparse_mixing_matrix_rejects_unknown():
+    with pytest.raises(KeyError, match="unknown topology"):
+        sparse.sparse_mixing_matrix("petersen", 10)
+
+
+def test_sparse_topology_shapes_and_edges():
+    sp = sparse.sparse_ring(8)
+    assert sp.n == 8 and sp.max_degree == 2 and sp.num_edges == 16
+    assert sp.neighbor_idx.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(sp.degree), np.full(8, 2))
+    np.testing.assert_array_equal(np.asarray(sp.offsets),
+                                  np.arange(0, 18, 2))
+
+
+def test_hierarchical_cluster_of_clusters():
+    """n=24 in 6 clusters of 4: intra-cluster full mesh + a leader ring;
+    symmetric, doubly stochastic, and much sparser than full."""
+    sp = sparse.sparse_hierarchical(24, cluster_size=4)
+    w = np.asarray(sparse.densify(sp))
+    np.testing.assert_allclose(w, w.T, atol=1e-7)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-6)
+    assert (w >= 0).all()
+    # non-leader clients only see their own cluster (3 peers); leaders see
+    # the cluster plus two ring neighbors
+    deg = np.asarray(sp.degree)
+    assert deg.max() == 5 and np.sum(deg == 5) == 6 and np.sum(deg == 3) == 18
+    with pytest.raises(ValueError, match="cluster_size must divide n"):
+        sparse.sparse_hierarchical(10, cluster_size=4)
+
+
+# ---------------------------------------------------------------------------
+# per-round samplers on a sparse support
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family",
+                         ["static", "erdos_renyi", "pairwise", "dropout"])
+def test_sparse_sampler_draws_doubly_stochastic_on_support(family):
+    n = 12
+    support = sparse.sparse_exp(n)
+    sup_mask = np.asarray(sparse.densify(support)) > 0
+    w_fn = sparse.make_sparse_w_sampler(
+        family, support, jax.random.PRNGKey(7), edge_prob=0.4,
+        client_drop_prob=0.3)
+    draw = jax.jit(lambda r: sparse.densify(w_fn(r)))
+    for r in (0, 3, 17):
+        w = np.asarray(draw(jnp.int32(r)))
+        np.testing.assert_allclose(w, w.T, atol=1e-6)
+        np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+        assert (w >= -1e-6).all()
+        # never an edge outside the support graph (+ diagonal)
+        assert (w[~(sup_mask | np.eye(n, dtype=bool))] == 0).all()
+
+
+def test_sparse_sampler_deterministic_per_round():
+    support = sparse.sparse_ring(8)
+    w_fn = sparse.make_sparse_w_sampler("erdos_renyi", support,
+                                        jax.random.PRNGKey(0), edge_prob=0.6)
+    a = w_fn(jnp.int32(5))
+    b = w_fn(jnp.int32(5))
+    c = w_fn(jnp.int32(6))
+    np.testing.assert_array_equal(np.asarray(a.neighbor_w),
+                                  np.asarray(b.neighbor_w))
+    assert not np.array_equal(np.asarray(a.neighbor_w),
+                              np.asarray(c.neighbor_w))
+
+
+def test_sparse_sampler_matches_dense_dropout_family():
+    """The dropout family reuses the dense family's Bernoulli draws, so the
+    sparse draw must densify to exactly masked_w(base, keep)."""
+    n = 8
+    base = topology.mixing_matrix("exp", n)
+    support = sparse.sparse_exp(n)
+    key = jax.random.PRNGKey(3)
+    w_dense_fn = stoch.make_w_sampler("dropout", n, key, base_w=base,
+                                      client_drop_prob=0.4)
+    w_sparse_fn = sparse.make_sparse_w_sampler("dropout", support, key,
+                                               client_drop_prob=0.4)
+    for r in (0, 2, 9):
+        np.testing.assert_allclose(
+            np.asarray(sparse.densify(w_sparse_fn(jnp.int32(r)))),
+            np.asarray(w_dense_fn(jnp.int32(r))), rtol=0, atol=1e-6)
+
+
+def test_sparse_sampler_rejects_unknown_family():
+    with pytest.raises(ValueError, match="unknown topology family"):
+        sparse.make_sparse_w_sampler("smallworld", sparse.sparse_ring(4),
+                                     jax.random.PRNGKey(0))
+
+
+def test_pair_slots_rejects_asymmetric_support():
+    sp = sparse.sparse_ring(6)
+    # break symmetry: client 0 lists 3 as a neighbor, 3 doesn't list 0
+    nidx = np.asarray(sp.neighbor_idx).copy()
+    nidx[0, 0] = 3
+    with pytest.raises(ValueError, match="not symmetric"):
+        sparse._pair_slots(nidx, np.asarray(sp.degree))
+
+
+@pytest.mark.parametrize("all_active", [False, True])
+def test_sparse_masked_w_matches_dense(all_active):
+    n = 9
+    sp = sparse.sparse_torus(n)
+    mask = (jnp.ones(n, bool) if all_active
+            else jnp.asarray([1, 0, 1, 1, 0, 1, 0, 1, 1], bool))
+    got = sparse.densify(sparse.sparse_masked_w(sp, mask))
+    want = stoch.masked_w(sparse.densify(sp), mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-6)
+    if not all_active:
+        w = np.asarray(got)
+        for i in np.flatnonzero(~np.asarray(mask)):
+            np.testing.assert_array_equal(w[i], np.eye(n)[i])
+
+
+# ---------------------------------------------------------------------------
+# neighbor-gather epilogue vs dense oracle
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ops  # noqa: E402
+
+
+@pytest.mark.parametrize("gossip_dtype", [None, "bfloat16"])
+@pytest.mark.parametrize("topo,n", TOPO_CLIENTS)
+def test_sparse_gossip_matches_dense_oracle(topo, n, gossip_dtype):
+    """sparse_gossip_round (xla) vs fused_gossip_round (xla) on the
+    densified W — identical operand-narrowing rules, so bf16 agrees to the
+    same ≤1e-6 as f32."""
+    sp = sparse.sparse_mixing_matrix(topo, n)
+    d = 96 + n  # not a lane multiple
+    delta, theta, c = _operands(n, d, seed=n)
+    t_s, c_s = ops.sparse_gossip_round(
+        sp.neighbor_idx, sp.neighbor_w, sp.self_w, delta, theta, c, 0.7, 4.2,
+        backend="xla", gossip_dtype=gossip_dtype)
+    t_d, c_d = ops.fused_gossip_round(
+        sparse.densify(sp), delta, theta, c, 0.7, 4.2, backend="xla",
+        gossip_dtype=gossip_dtype)
+    # gather-sum vs dense matmul accumulate in different orders — one ulp
+    # past 1e-6 on f32 operands of magnitude ~5
+    np.testing.assert_allclose(t_s, t_d, rtol=0, atol=2e-6)
+    np.testing.assert_allclose(c_s, c_d, rtol=0, atol=2e-6)
+
+
+@pytest.mark.parametrize("topo,n", (("ring", 8), ("torus", 9), ("exp", 8)))
+def test_sparse_kernel_matches_xla(topo, n):
+    """The Pallas neighbor-gather kernel (interpret mode) vs the pure-jnp
+    sparse oracle."""
+    sp = sparse.sparse_mixing_matrix(topo, n)
+    d = 384 + n
+    delta, theta, c = _operands(n, d, seed=n)
+    args = (sp.neighbor_idx, sp.neighbor_w, sp.self_w, delta, theta, c,
+            0.7, 4.2)
+    t_k, c_k = ops.sparse_gossip_round(*args, backend="interpret")
+    t_r, c_r = ops.sparse_gossip_round(*args, backend="xla")
+    np.testing.assert_allclose(t_k, t_r, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(c_k, c_r, rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("d", [1, 127, 128, 513, 640])
+def test_sparse_kernel_ragged_d_tile_padding(d):
+    n = 4
+    sp = sparse.sparse_exp(n)
+    delta, theta, c = _operands(n, d, seed=d)
+    args = (sp.neighbor_idx, sp.neighbor_w, sp.self_w, delta, theta, c,
+            1.3, -2.0)
+    t_k, c_k = ops.sparse_gossip_round(*args, backend="interpret")
+    t_r, c_r = ops.sparse_gossip_round(*args, backend="xla")
+    assert t_k.shape == c_k.shape == (n, d)
+    np.testing.assert_allclose(t_k, t_r, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(c_k, c_r, rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("family", ["erdos_renyi", "pairwise", "dropout"])
+def test_sparse_gossip_sampled_w_masked_matches_dense(family, backend):
+    """Per-round sampled sparse W + participation mask through the sparse
+    epilogue vs the dense fused epilogue on the densified draw."""
+    n, d = 12, 200
+    support = sparse.sparse_exp(n)
+    w_fn = sparse.make_sparse_w_sampler(family, support, jax.random.PRNGKey(7),
+                                        edge_prob=0.5, client_drop_prob=0.3)
+    mask_fn = stoch.make_participation_sampler(n, jax.random.PRNGKey(9), 0.6)
+    for r in (0, 3):
+        sp = sparse.sparse_masked_w(w_fn(jnp.int32(r)), mask_fn(jnp.int32(r)))
+        delta, theta, c = _operands(n, d, seed=r)
+        t_s, c_s = ops.sparse_gossip_round(
+            sp.neighbor_idx, sp.neighbor_w, sp.self_w, delta, theta, c,
+            0.7, 4.2, backend=backend)
+        t_d, c_d = ops.fused_gossip_round(
+            sparse.densify(sp), delta, theta, c, 0.7, 4.2, backend="xla")
+        np.testing.assert_allclose(t_s, t_d, rtol=0, atol=2e-6)
+        np.testing.assert_allclose(c_s, c_d, rtol=0, atol=2e-6)
+
+
+def test_sparse_mix_matches_dense_matmul():
+    n, d = 9, 33
+    sp = sparse.sparse_torus(n)
+    buf = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    got = sparse.sparse_mix(sp, buf)
+    want = np.asarray(sparse.densify(sp)) @ np.asarray(buf)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# full-round engine: sparse_packed vs dense trajectories
+# ---------------------------------------------------------------------------
+
+def _traj(impl, backend, topo="ring", n=8, rounds=4, algo="kgt_minimax"):
+    key = jax.random.PRNGKey(0)
+    data = make_quadratic_data(key, n, dx=6, dy=3, heterogeneity=2.0)
+    prob = quadratic_problem(data, sigma=0.0)
+    k = 2
+    cfg = AlgorithmConfig(algorithm=algo, num_clients=n, local_steps=k,
+                          eta_cx=0.01, eta_cy=0.1, eta_sx=0.5, eta_sy=0.5,
+                          topology=topo, mixing_impl=impl,
+                          gossip_backend=backend)
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = jax.jit(make_round_step(prob, cfg))
+    for t in range(rounds):
+        keys = jax.random.split(jax.random.PRNGKey(t), k * n).reshape(k, n, 2)
+        stt = step(stt, kb, keys)
+    return stt
+
+
+@pytest.mark.parametrize("topo", ["ring", "exp", "full"])
+def test_sparse_round_matches_dense_trajectory(topo):
+    dense = _traj("dense", "auto", topo=topo)
+    sp = _traj("sparse_packed", "xla", topo=topo)
+    for name in ("x", "y", "cx", "cy"):
+        for a, b in zip(jax.tree.leaves(getattr(dense, name)),
+                        jax.tree.leaves(getattr(sp, name))):
+            np.testing.assert_allclose(a, b, rtol=0, atol=2e-5,
+                                       err_msg=f"{topo}/{name}")
+
+
+@pytest.mark.parametrize("algo", ["kgt_minimax", "dsgda", "local_sgda",
+                                  "gt_gda"])
+def test_sparse_round_matches_dense_all_variants(algo):
+    dense = _traj("dense", "auto", algo=algo)
+    sp = _traj("sparse_packed", "xla", algo=algo)
+    for name in ("x", "y", "cx", "cy"):
+        for a, b in zip(jax.tree.leaves(getattr(dense, name)),
+                        jax.tree.leaves(getattr(sp, name))):
+            np.testing.assert_allclose(a, b, rtol=0, atol=2e-5,
+                                       err_msg=f"{algo}/{name}")
+
+
+def test_sparse_round_interpret_kernel_backend():
+    """The Pallas neighbor-gather kernel drives the full round too."""
+    xla = _traj("sparse_packed", "xla", rounds=2)
+    interp = _traj("sparse_packed", "interpret", rounds=2)
+    for a, b in zip(jax.tree.leaves(xla.x), jax.tree.leaves(interp.x)):
+        np.testing.assert_allclose(a, b, rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("family", ["erdos_renyi", "dropout"])
+def test_sparse_round_under_churn_matches_dense(family):
+    """Traced sparse W + participation mask through make_round_step: the
+    dense arm consumes densify() of the same draw, so the trajectories must
+    agree — and inactive clients freeze bit-exactly on the sparse path."""
+    n, k = 8, 2
+    key = jax.random.PRNGKey(5)
+    data = make_quadratic_data(key, n, dx=6, dy=3, heterogeneity=1.5)
+    prob = quadratic_problem(data, sigma=0.0)
+    support = sparse.sparse_exp(n)
+    w_fn = sparse.make_sparse_w_sampler(family, support,
+                                        jax.random.PRNGKey(11),
+                                        edge_prob=0.5, client_drop_prob=0.3)
+    mask_fn = stoch.make_participation_sampler(n, jax.random.PRNGKey(9), 0.7)
+    outs = {}
+    for impl in ("dense", "sparse_packed"):
+        cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                              eta_cy=0.1, eta_sx=0.5, eta_sy=0.5,
+                              topology="exp", mixing_impl=impl,
+                              gossip_backend="xla")
+        cb = {kk: v for kk, v in data.items() if kk != "mu"}
+        kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)),
+                          cb)
+        stt = init_state(prob, cfg, key, init_batch=cb,
+                         init_keys=jax.random.split(key, n))
+        step = jax.jit(make_round_step(prob, cfg, traced_w=True,
+                                       participation=True))
+        frozen_ok = True
+        for t in range(3):
+            keys = jax.random.split(jax.random.PRNGKey(t),
+                                    k * n).reshape(k, n, 2)
+            w_t = w_fn(jnp.int32(t))
+            mask = mask_fn(jnp.int32(t))
+            prev = stt
+            if impl == "dense":
+                stt = step(stt, kb, keys, sparse.densify(w_t), mask)
+            else:
+                stt = step(stt, kb, keys, w_t, mask)
+                inactive = ~np.asarray(mask)
+                for name in ("x", "y", "cx", "cy"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(stt, name))[inactive],
+                        np.asarray(getattr(prev, name))[inactive],
+                        err_msg=name)
+        outs[impl] = stt
+    for name in ("x", "y", "cx", "cy"):
+        for a, b in zip(jax.tree.leaves(getattr(outs["dense"], name)),
+                        jax.tree.leaves(getattr(outs["sparse_packed"], name))):
+            np.testing.assert_allclose(a, b, rtol=0, atol=2e-5,
+                                       err_msg=f"{family}/{name}")
+
+
+def test_sparse_packed_rejects_topology_cycle():
+    n = 4
+    data = make_quadratic_data(jax.random.PRNGKey(0), n, dx=4, dy=2)
+    prob = quadratic_problem(data)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=2,
+                          mixing_impl="sparse_packed",
+                          topology_cycle=("ring", "full"))
+    with pytest.raises(ValueError, match="not supported with topology_cycle"):
+        make_round_step(prob, cfg)
+
+
+# ---------------------------------------------------------------------------
+# the dense-materialization guard (regression: silent O(n²) at scale)
+# ---------------------------------------------------------------------------
+
+def test_dense_sampler_refuses_past_materialization_limit():
+    n = stoch.DENSE_MATERIALIZATION_LIMIT + 1
+    w_fn = stoch.make_w_sampler("erdos_renyi", n, jax.random.PRNGKey(0),
+                                edge_prob=0.5)
+    with pytest.raises(ValueError,
+                       match=r"would materialize a dense \(513, 513\) mixing "
+                             r"matrix \(limit 512\)"):
+        w_fn(jnp.int32(0))
+
+
+def test_masked_w_refuses_past_materialization_limit():
+    n = 600
+    with pytest.raises(ValueError, match="mixing_impl='sparse_packed'"):
+        stoch.masked_w(jnp.eye(n), jnp.ones(n, bool))
+
+
+def test_sparse_full_and_star_refuse_past_limit():
+    """The sparse 'twins' of the dense topologies are only dense in
+    disguise — they must refuse at the same threshold."""
+    for ctor in (sparse.sparse_full, sparse.sparse_star):
+        with pytest.raises(ValueError, match="would materialize"):
+            ctor(stoch.DENSE_MATERIALIZATION_LIMIT + 1)
+    # sparse families stay available past the limit
+    assert sparse.sparse_exp(1024).max_degree < 32
+
+
+def test_guard_threshold_is_inclusive():
+    """Exactly at the limit still works (the guard is strictly greater)."""
+    n = stoch.DENSE_MATERIALIZATION_LIMIT
+    stoch.check_dense_materialization(n, "test")  # no raise
+    with pytest.raises(ValueError):
+        stoch.check_dense_materialization(n + 1, "test")
