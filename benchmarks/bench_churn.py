@@ -18,6 +18,22 @@ from benchmarks.common import replicate_row
 FAMILIES = ["static", "erdos_renyi", "pairwise", "dropout"]
 
 
+def static_baseline(rows: dict) -> dict:
+    """The static-topology full-participation row, selected by its fields.
+
+    Selection must be structural, not by display label: the label embeds
+    ``edge_prob`` whenever the family has more than one, so a key like
+    ``"static@1.0"`` silently stops existing when the grid changes and the
+    headline comparison crashes (or worse, picks up a stale row from a
+    previously merged store).
+    """
+    cands = [r for r in rows.values() if isinstance(r, dict)
+             and r.get("topology_family") == "static"]
+    if not cands:
+        raise KeyError("churn rows contain no static-topology row")
+    return max(cands, key=lambda r: r["participation"])
+
+
 def run(csv=print):
     spec = defs.SWEEPS["churn"]
     res = sweep_run.run_sweep(spec)
@@ -34,7 +50,8 @@ def run(csv=print):
                                     participation=rate, edge_prob=ep)
                 label = (f"{family}(edge_prob={ep})"
                          if len(edge_probs) > 1 else family)
-                rows[f"{label}@{rate}"] = dict(participation=rate,
+                rows[f"{label}@{rate}"] = dict(topology_family=family,
+                                               participation=rate,
                                                edge_prob=ep, **row)
                 csv(f"churn,{label},participation={rate},"
                     f"rounds={row['rounds_to_eps']},"
@@ -42,7 +59,7 @@ def run(csv=print):
                     f"final_mean={row['final_grad_mean']:.4f},"
                     f"hit_rate={row['hit_rate']}")
     # headline: worst-case degradation of the tracked variant under churn
-    static_full = rows["static@1.0"]["final_grad_mean"]
+    static_full = static_baseline(rows)["final_grad_mean"]
     worst = max(r["final_grad_mean"] for r in rows.values())
     csv(f"churn,summary,static_full={static_full:.4f},worst={worst:.4f}")
     rows["_summary"] = {"static_full_final_mean": static_full,

@@ -16,6 +16,7 @@ import sys
 import time
 
 from benchmarks import (
+    bench_adversary,
     bench_churn,
     bench_convergence,
     bench_engine,
@@ -39,6 +40,7 @@ BENCHES = {
     "topology": bench_topology.run,            # V4: T vs p
     "speedup": bench_speedup.run,              # V5: linear speedup in n
     "churn": bench_churn.run,                  # V6: random topologies + participation
+    "adversary": bench_adversary.run,          # V7: Byzantine clients vs robust gossip
     "gossip": bench_gossip.run,                # round-epilogue lowerings
     "scale": bench_scale.run,                  # sparse gossip: cost vs n (edges, not n²)
     "engine": bench_engine.run,                # host loop vs scanned chunks
@@ -56,15 +58,28 @@ def _provenance() -> dict:
 def main() -> None:
     names = sys.argv[1:] or list(BENCHES)
     results = {}
+    failures = {}
     for name in names:
         fn = BENCHES[name]
         print(f"# --- {name} ---", flush=True)
         t0 = time.time()
         try:
-            results[name] = fn(csv=lambda s: print(s, flush=True))
+            rows = fn(csv=lambda s: print(s, flush=True))
         except FileNotFoundError as e:
             print(f"{name},SKIPPED,missing artifact: {e}", flush=True)
             continue
+        except Exception as e:  # noqa: BLE001 — one bench must not eat the rest
+            # a crashing bench used to abort main() before the merged-store
+            # write, silently discarding every benchmark that had already
+            # finished; record it, keep going, and fail the run at the end
+            failures[name] = repr(e)
+            print(f"{name},FAILED,{e!r}", flush=True)
+            continue
+        if not rows:
+            failures[name] = "returned no rows"
+            print(f"{name},FAILED,returned no rows", flush=True)
+            continue
+        results[name] = rows
         print(f"{name},wall_s={time.time()-t0:.1f}", flush=True)
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     # merge into existing results so partial runs (e.g. `run gossip` in CI)
@@ -80,6 +95,17 @@ def main() -> None:
     merged["_provenance"] = _provenance()
     with open(RESULTS_PATH, "w") as f:
         json.dump(merged, f, indent=1, default=str)
+    # a bench that produced rows must land in the merged store — re-read and
+    # check, so a serialization bug can't silently drop a benchmark entry
+    with open(RESULTS_PATH) as f:
+        stored = json.load(f)
+    for name in results:
+        if not stored.get(name):
+            failures[name] = "rows produced but missing from merged store"
+    if failures:
+        for name, why in sorted(failures.items()):
+            print(f"benchmarks,FAILED,{name}: {why}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,11 @@
 #   5. sparse-gossip smoke — compile + one mixing_impl=sparse_packed round
 #      at n=256 with the clients dim sharded over 4 fake devices, holding
 #      the Σc=0 tracking invariant (benchmarks.bench_scale --smoke).
-#   6. benchmarks.run gossip scale engine — the round-epilogue bench
+#   6. adversary smoke — compile + one Byzantine trimmed_mean round at n=8
+#      under a sign-flip attacker: honest clients stay finite, an all-honest
+#      adversary extra is bit-identical to the plain step, and the robust
+#      reduce matches the kernels.ref oracle (bench_adversary --smoke).
+#   7. benchmarks.run gossip scale engine — the round-epilogue bench
 #      (collective counts per mixing_impl), the clients-axis scaling bench
 #      (sparse edge-proportional cost up to n=4096, sub-quadratic slope),
 #      and the engine bench (rounds/s: per-round host dispatch vs scanned
@@ -73,6 +77,9 @@ python -m repro.sweep.run smoke
 echo "== sparse-gossip smoke (one sparse_packed round at n=256, 4 fake devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 python -m benchmarks.bench_scale --smoke
+
+echo "== adversary smoke (one Byzantine trimmed_mean round, sign-flip attacker) =="
+python -m benchmarks.bench_adversary --smoke
 
 echo "== gossip + scale + engine benches (merged into results/benchmarks.json) =="
 python -m benchmarks.run gossip scale engine

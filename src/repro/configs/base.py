@@ -230,6 +230,16 @@ class AlgorithmConfig:
     client_drop_prob: float = 0.3     # dropout family: P[client drops links]
     participation_rate: float = 1.0   # < 1: per-round Bernoulli client mask
     topology_seed: int = 0            # seeds the W/mask sampling streams
+    # --- Byzantine adversary axis (repro.core.adversary).  num_byzantine
+    # clients (the first f client slots) corrupt their *outgoing* Δ each
+    # round per `attack`; honest clients are untouched.  Defending requires
+    # a robust mixing_impl ("coord_median"/"trimmed_mean" and their
+    # sparse_* forms) — plain gossip averages the poison in.  `robust_trim`
+    # is the number of extreme values trimmed per side by trimmed_mean.
+    num_byzantine: int = 0
+    attack: str = "honest"            # honest | sign_flip | large_norm | random_noise
+    attack_scale: float = 1.0         # attack magnitude multiplier
+    robust_trim: int = 1              # trimmed_mean: values trimmed per side
 
 
 # ---------------------------------------------------------------------------

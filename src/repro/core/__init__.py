@@ -1,3 +1,12 @@
+from repro.core.adversary import (  # noqa: F401
+    ATTACK_IDS,
+    ATTACK_STREAM,
+    ATTACKS,
+    Adversary,
+    apply_attack,
+    attack_ids,
+    make_attack_sampler,
+)
 from repro.core.kgt_minimax import (  # noqa: F401
     KGTState,
     diagnostics,
@@ -8,11 +17,17 @@ from repro.core.kgt_minimax import (  # noqa: F401
 )
 from repro.core.minimax import MinimaxProblem  # noqa: F401
 from repro.core.mixing import (  # noqa: F401
+    MIXING_IMPLS,
+    ROBUST_IMPLS,
+    ROBUST_RULES,
     consensus_error,
     make_mixer,
     mix_dense,
     mix_packed,
     mix_ring,
+    robust_mix_dense,
+    robust_mix_packed,
+    robust_mix_sparse,
 )
 from repro.core.packing import PackSpec, pack, pack_spec, unpack  # noqa: F401
 from repro.core.objectives import (  # noqa: F401

@@ -1,0 +1,131 @@
+"""Byzantine clients: per-round attacker models riding the extras protocol.
+
+The paper assumes every client honestly follows Algorithm 1; real
+decentralized fleets contain hostile participants.  This module opens that
+axis the same way the churn axes opened (``repro.core.stochastic_topology``):
+the adversary is an **on-device per-round draw** — an :class:`Adversary`
+pytree carrying the per-client attacker-id vector and this round's noise
+key — produced by a sampler that is a pure function of the round index on
+the ``round_stream_key`` fold_in discipline (stream :data:`ATTACK_STREAM`,
+disjoint from ``W_STREAM``/``MASK_STREAM`` and the data streams), so a
+checkpoint restored at round r replays the identical attack sequence.
+
+Attack models (:data:`ATTACKS`), applied to the attacker's *outgoing*
+round update Δ (``kgt_minimax.make_round_step(byzantine=True)`` corrupts
+Δ right after the local steps, before gossip/correction/mixing consume it):
+
+* ``honest`` (id 0) — no corruption; honest rows are **bit-untouched** by
+  :func:`apply_attack` regardless of which other ids are present;
+* ``sign_flip`` (id 1) — sends ``−scale·Δ``: the classic direction-reversal
+  attack, deterministic, strongest against plain averaging;
+* ``large_norm`` (id 2) — sends the constant vector ``LARGE_NORM·scale``:
+  a magnitude outlier, trivially filtered by order statistics but fatal to
+  any linear aggregation;
+* ``random_noise`` (id 3) — sends ``scale·N(0, I)`` drawn from the round's
+  attack key: an uninformative update that poisons averages with variance.
+
+The attacker *follows the protocol with its corrupted Δ*: the attacked
+value rides every downstream use (its own correction update included).
+Under any doubly stochastic W that relabeling preserves Σ_i c_i = 0 exactly
+— an attacked Δ is still just *a* Δ — which is the invariant the property
+suite holds plain-gossip rounds to under every attack.  Defending requires
+replacing gossip with a robust ``mixing_impl``
+(``repro.core.mixing.ROBUST_IMPLS``), which trades that identity for the
+honest-subset bounded-drift property (see docs/architecture.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stochastic_topology as stoch_lib
+
+ATTACKS = ("honest", "sign_flip", "large_norm", "random_noise")
+ATTACK_IDS = {name: i for i, name in enumerate(ATTACKS)}
+
+# fold_in stream id of the per-round attack-noise draw — disjoint from the
+# W/mask streams (1717/2929) and the data sampler's (raw round key, 999).
+ATTACK_STREAM = 4242
+
+# the large_norm attack's per-coordinate magnitude (× attack scale)
+LARGE_NORM = 100.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Adversary:
+    """One round's adversary state, carried as a round-step extra.
+
+    A registered pytree so it flows through jit/scan/vmap like the sampled
+    W and participation mask do — the sweep path batches ``ids``/``scale``
+    built from traced grid leaves (attacker count, attack id, scale).
+    """
+    ids: jnp.ndarray    # (n,) int32 per-client attack id (0 = honest)
+    key: jnp.ndarray    # this round's PRNG key (random_noise draws)
+    scale: jnp.ndarray  # f32 scalar attack magnitude multiplier
+
+
+def attack_ids(n: int, num_byzantine, attack_id) -> jnp.ndarray:
+    """(n,) int32 attacker-id vector: the first ``num_byzantine`` client
+    slots carry ``attack_id``, the rest are honest (0).  Both arguments may
+    be traced scalars — the sweep grid batches attacker fraction and attack
+    type as trajectory leaves."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    return jnp.where(idx < num_byzantine,
+                     jnp.asarray(attack_id, jnp.int32), jnp.int32(0))
+
+
+def make_attack_sampler(
+    n: int,
+    key,
+    *,
+    num_byzantine,
+    attack: str = "sign_flip",
+    scale=1.0,
+) -> Callable[[jnp.ndarray], Adversary]:
+    """``attack_fn(round_idx) -> Adversary`` for the engine's sampler slot
+    (``engine.sampler.with_topology(attack_fn=...)``).  The attacker set is
+    fixed across rounds (the first ``num_byzantine`` clients); only the
+    noise key is per-round, drawn on :data:`ATTACK_STREAM`."""
+    if attack not in ATTACK_IDS:
+        raise ValueError(f"unknown attack {attack!r}: {ATTACKS}")
+    ids = attack_ids(n, num_byzantine, ATTACK_IDS[attack])
+    sc = jnp.float32(scale)
+    return lambda r: Adversary(
+        ids=ids, key=stoch_lib.round_stream_key(key, r, ATTACK_STREAM),
+        scale=sc)
+
+
+def _client_broadcast(v, ndim: int):
+    return v.reshape(v.shape + (1,) * (ndim - 1))
+
+
+def apply_attack(adv: Adversary, tree, *, stream: int = 0):
+    """Corrupt the per-client (n, …) leaves of ``tree`` per ``adv.ids``.
+
+    Honest rows (id 0) pass through bit-exactly (they take the untouched
+    ``where`` default).  ``stream`` separates the noise draws of different
+    variables attacked in the same round (Δx vs Δy); each leaf additionally
+    folds its flat index in, so no two leaves share noise.
+    """
+    key = jax.random.fold_in(adv.key, stream)
+    leaves, treedef = jax.tree.flatten(tree)
+    scale = adv.scale.astype(jnp.float32)
+
+    def one(i, x):
+        m = _client_broadcast(adv.ids, x.ndim)
+        x32 = x.astype(jnp.float32)
+        noise = scale * jax.random.normal(
+            jax.random.fold_in(key, i), x.shape, jnp.float32)
+        big = jnp.broadcast_to(LARGE_NORM * scale, x.shape)
+        out = jnp.select(
+            [m == 1, m == 2, m == 3],
+            [-scale * x32, big, noise],
+            x32)
+        return out.astype(x.dtype)
+
+    return jax.tree.unflatten(
+        treedef, [one(i, x) for i, x in enumerate(leaves)])

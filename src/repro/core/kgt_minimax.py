@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import AlgorithmConfig
+from repro.core import adversary as adversary_lib
 from repro.core import mixing as mixing_lib
 from repro.core import packing
 from repro.core import sparse_topology as sparse_lib
@@ -164,6 +165,7 @@ def make_round_step(
     traced_etas: bool = False,
     traced_w: bool = False,
     participation: bool = False,
+    byzantine: bool = False,
 ):
     """Builds round_step(state, batches, keys) -> state.
 
@@ -188,8 +190,25 @@ def make_round_step(
     (self-loop fallback, :func:`stochastic_topology.masked_w` applied to
     whatever W the round uses), and their (θ, c) freeze bit-exactly; the
     Σ_i c_i = 0 tracking invariant holds under any mask because the masked
-    W stays doubly stochastic.  Extras order: ``round_step(state, batches,
-    keys[, etas][, w][, mask])``.
+    W stays doubly stochastic.  ``byzantine=True`` appends a
+    :class:`repro.core.adversary.Adversary` pytree: each attacker's
+    *outgoing* Δ is corrupted right after the local steps — the attacked Δ
+    rides every downstream use (gossip, its own correction, mixing), so
+    under any doubly stochastic W the Σc = 0 identity survives every attack
+    (an attacked Δ is still just a Δ); honest rows are bit-untouched.
+    Extras order: ``round_step(state, batches, keys[, etas][, w][, mask]
+    [, adversary])``.
+
+    The **robust** ``mixing_impl``\\s (``mixing.ROBUST_IMPLS``:
+    ``coord_median`` / ``trimmed_mean`` and their ``sparse_*``
+    neighbor-gather forms) defend against those attacks by replacing every
+    ``Σ_j w_ij v_j`` with a per-coordinate order statistic over the support
+    of this round's W.  The aggregation R is nonlinear, so the parameter
+    update becomes the one-pass ``θ ← R(θ + η_s Δ)`` (the linear split
+    ``Wθ + η_s WΔ`` no longer exists) and the line-7/8 corrections keep
+    their shape, ``c += ±(Δ − R(Δ))/(K η_c)``, but are **not** mean-
+    preserving — Σ_i c_i drifts (boundedly, on the honest subset) instead
+    of staying 0.  See docs/architecture.md § adversary axis.
 
     With ``mixing_impl="sparse_packed"`` the mixing matrix is a
     :class:`repro.core.sparse_topology.SparseTopology` everywhere a dense
@@ -220,18 +239,23 @@ def make_round_step(
             "traced_w supplies W per round; topology_cycle would fight it — "
             "drop the cycle (sample the W sequence instead) or traced_w")
     sparse = cfg.mixing_impl == "sparse_packed"
-    if cfg.topology_cycle and sparse:
-        # the cycle path stacks dense (n, n) members and indexes per round;
-        # sample a sparse W sequence (make_sparse_w_sampler) instead
+    robust = cfg.mixing_impl in mixing_lib.ROBUST_IMPLS
+    sparse_robust = robust and cfg.mixing_impl.startswith("sparse_")
+    # sparse_w: W is a SparseTopology everywhere a dense array would appear
+    sparse_w = sparse or sparse_robust
+    robust_rule = mixing_lib.robust_rule(cfg.mixing_impl) if robust else None
+    if cfg.topology_cycle and (sparse_w or robust):
+        # the cycle path stacks dense (n, n) members and lowers them through
+        # mix_dense per round; neither the neighbor-list representation nor
+        # the robust order-statistic epilogue rides it
         raise ValueError(
-            "mixing_impl='sparse_packed' is not supported with "
-            "topology_cycle; sample a per-round SparseTopology via "
-            "sparse_topology.make_sparse_w_sampler and traced_w instead")
+            f"mixing_impl={cfg.mixing_impl!r} is not supported with "
+            "topology_cycle; use traced_w with a per-round sampler instead")
     dynamic_w = traced_w or participation
     packed = cfg.mixing_impl == "pallas_packed"
     pack_gd = (None if cfg.gossip_dtype in (None, "float32")
                else jnp.dtype(cfg.gossip_dtype))
-    if dynamic_w and not packed and not sparse:
+    if dynamic_w and not packed and not sparse and not robust:
         # validates the impl (ring-style neighbor exchanges cannot realize a
         # per-round arbitrary W) and gives us mix(tree, w) with w traced
         traced_mix = mixing_lib.make_traced_mixer(
@@ -250,16 +274,16 @@ def make_round_step(
     else:
         if w is None and not traced_w:
             w = (sparse_lib.sparse_mixing_matrix(cfg.topology, cfg.num_clients)
-                 if sparse
+                 if sparse_w
                  else topo_lib.mixing_matrix(cfg.topology, cfg.num_clients))
-        if sparse:
+        if sparse_w:
             w_arr = (None if w is None
                      else (w if isinstance(w, sparse_lib.SparseTopology)
                            else sparse_lib.from_dense(np.asarray(w))))
         else:
             w_arr = None if w is None else jnp.asarray(w, jnp.float32)
         get_w = lambda round_idx: w_arr
-        if packed or sparse or dynamic_w:
+        if packed or sparse_w or robust or dynamic_w:
             make_mix = None  # W is consumed directly, per round
         else:
             static_mix = mixing_lib.make_mixer(
@@ -273,14 +297,14 @@ def make_round_step(
 
     def _round(state: KGTState, batches, keys,
                eta_cx, eta_cy, eta_sx, eta_sy, corr_x, corr_y,
-               w_t=None, mask=None) -> KGTState:
-        if packed or sparse or dynamic_w:
+               w_t=None, mask=None, adv=None) -> KGTState:
+        if packed or sparse_w or robust or dynamic_w:
             if w_t is None:
                 w_t = get_w(state.round)
             if mask is not None:
-                w_t = (sparse_lib.sparse_masked_w(w_t, mask) if sparse
+                w_t = (sparse_lib.sparse_masked_w(w_t, mask) if sparse_w
                        else stoch_lib.masked_w(w_t, mask))
-            mix = (None if packed or sparse
+            mix = (None if packed or sparse_w or robust
                    else (lambda tree: traced_mix(tree, w_t)))
         else:
             mix = make_mix(state.round)
@@ -302,12 +326,65 @@ def make_round_step(
 
         dx = _tree_sub(xk, state.x)   # Δx = x^{(t)+K} − x^{(t)}
         dy = _tree_sub(yk, state.y)
+        if adv is not None:
+            # Byzantine corruption of the outgoing Δ: the attacked value
+            # rides every use below — gossip, the attacker's own correction,
+            # mixing — so the attacker "follows the protocol" with its
+            # corrupted update and honest rows stay bit-untouched.  Applied
+            # before the participation zeroing so an inactive attacker
+            # contributes nothing, exactly like an inactive honest client.
+            dx = adversary_lib.apply_attack(adv, dx, stream=0)
+            dy = adversary_lib.apply_attack(adv, dy, stream=1)
         if mask is not None:
             # inactive clients contribute no local update: with Δ_i = 0 and
             # W row/col i = e_i (masked_w above), lines 7-11 are no-ops for
             # them and their mass never reaches active clients
             dx = _tree_mask_clients(mask, dx)
             dy = _tree_mask_clients(mask, dy)
+
+        if robust:
+            # Robust-aggregation epilogue: R replaces every W contraction.
+            # R is nonlinear, so the parameter update is the one-pass
+            # θ ← R(θ + η_s Δ) (aggregating the stepped parameters — the
+            # linear split Wθ + η_s·WΔ does not exist), and the corrections
+            # keep line 7/8's shape c += ±(Δ − R(Δ))/(K η_c) without the
+            # Σc = 0 telescoping (R is not doubly stochastic).  W enters
+            # only as the support of each client's neighbor set, so
+            # participation masking above composes: a masked client's
+            # support collapses to {self} and _freeze_inactive pins it.
+            def agg(buf):
+                if sparse_robust:
+                    return mixing_lib.robust_mix_sparse(
+                        buf, w_t, rule=robust_rule, trim=cfg.robust_trim,
+                        gossip_dtype=pack_gd)
+                return mixing_lib.robust_mix_dense(
+                    buf, w_t, rule=robust_rule, trim=cfg.robust_trim,
+                    gossip_dtype=pack_gd)
+
+            spec_x = packing.pack_spec(state.x)
+            spec_y = packing.pack_spec(state.y)
+            dxb = packing.pack(dx, spec_x)
+            dyb = packing.pack(dy, spec_y)
+            xb = agg(packing.pack(state.x, spec_x) + eta_sx * dxb)
+            yb = agg(packing.pack(state.y, spec_y) + eta_sy * dyb)
+            if track:
+                spec_cx = packing.pack_spec(state.cx)
+                spec_cy = packing.pack_spec(state.cy)
+                cx0 = packing.pack(state.cx, spec_cx)
+                cy0 = packing.pack(state.cy, spec_cy)
+                cxb = (cx0.astype(jnp.float32)
+                       + corr_x * (dxb - agg(dxb))).astype(cx0.dtype)
+                cyb = (cy0.astype(jnp.float32)
+                       + corr_y * (dyb - agg(dyb))).astype(cy0.dtype)
+                cx = packing.unpack(cxb, spec_cx)
+                cy = packing.unpack(cyb, spec_cy)
+            else:
+                cx, cy = state.cx, state.cy
+            new_state = KGTState(
+                x=packing.unpack(xb, spec_x), y=packing.unpack(yb, spec_y),
+                cx=cx, cy=cy, round=state.round + 1)
+            return (new_state if mask is None
+                    else _freeze_inactive(mask, new_state, state))
 
         if sparse:
             # Sparse whole-state lowering: same fused epilogue as the packed
@@ -430,9 +507,10 @@ def make_round_step(
         return (new_state if mask is None
                 else _freeze_inactive(mask, new_state, state))
 
-    n_extras = int(traced_w) + int(participation)
+    n_extras = int(traced_w) + int(participation) + int(byzantine)
     extras_doc = "".join(
-        f"[{name}]" for name, on in (("w", traced_w), ("mask", participation))
+        f"[{name}]" for name, on in (("w", traced_w), ("mask", participation),
+                                     ("adversary", byzantine))
         if on)
 
     def _split_extras(extras):
@@ -444,12 +522,13 @@ def make_round_step(
         it = iter(extras)
         w_t = next(it) if traced_w else None
         mask = next(it) if participation else None
-        return w_t, mask
+        adv = next(it) if byzantine else None
+        return w_t, mask, adv
 
     if traced_etas:
         def round_step(state: KGTState, batches, keys, etas,
                        *extras) -> KGTState:
-            w_t, mask = _split_extras(extras)
+            w_t, mask, adv = _split_extras(extras)
             # η_s = 1 for the no-tracking baselines (plain parameter
             # averaging), exactly like the static path below
             esx = etas["eta_sx"] if track else 1.0
@@ -458,7 +537,7 @@ def make_round_step(
                           esx, esy,
                           etas["corr_x"] if track else None,
                           etas["corr_y"] if track else None,
-                          w_t=w_t, mask=mask)
+                          w_t=w_t, mask=mask, adv=adv)
 
         return round_step
 
@@ -468,14 +547,14 @@ def make_round_step(
     eta_sy = cfg.eta_sy if track else 1.0
 
     def round_step(state: KGTState, batches, keys, *extras) -> KGTState:
-        w_t, mask = _split_extras(extras)
+        w_t, mask, adv = _split_extras(extras)
         scale = lr_scale(state.round) if lr_scale is not None else 1.0
         eta_cx = cfg.eta_cx * scale
         eta_cy = cfg.eta_cy * scale
         corr_x = 1.0 / (k_steps * eta_cx) if track else None
         corr_y = -1.0 / (k_steps * eta_cy) if track else None
         return _round(state, batches, keys, eta_cx, eta_cy, eta_sx, eta_sy,
-                      corr_x, corr_y, w_t=w_t, mask=mask)
+                      corr_x, corr_y, w_t=w_t, mask=mask, adv=adv)
 
     return round_step
 

@@ -13,6 +13,16 @@ Two lowering strategies for ``Σ_j w_ij T_j``:
 
 ``gossip_dtype`` optionally downcasts the *communicated* values (beyond-paper
 optimization; tracking state stays f32).
+
+Beyond the linear lowerings, the **robust** impls (:data:`ROBUST_IMPLS`)
+replace ``Σ_j w_ij T_j`` with a per-coordinate order statistic over each
+client's neighbor set — coordinate-wise median or b-trimmed mean over
+``{j : w_ij > 0} ∪ {self}`` — the Byzantine-tolerant aggregation of
+robust decentralized learning (Ghiasvand et al., PAPERS.md).  They consume
+W only as a *support* (which neighbors count), are **nonlinear** (so not
+doubly stochastic: Σ_i R(T)_i ≠ Σ_i T_i in general), and compose with
+participation masking for free — ``masked_w`` collapses an inactive row's
+support to ``{self}``, so the client keeps its own value exactly.
 """
 from __future__ import annotations
 
@@ -103,15 +113,130 @@ def mix_sparse(tree: Any, sp, gossip_dtype=None) -> Any:
     return packing.unpack(mixed, spec)
 
 
+# ---------------------------------------------------------------------------
+# robust (Byzantine-tolerant) aggregation
+# ---------------------------------------------------------------------------
+
+ROBUST_RULES = ("coord_median", "trimmed_mean")
+# first-class mixing_impl names: dense form + sparse neighbor-gather form
+ROBUST_IMPLS = ("coord_median", "trimmed_mean",
+                "sparse_coord_median", "sparse_trimmed_mean")
+
+
+def robust_rule(impl: str) -> str:
+    """The aggregation rule of a robust mixing_impl name."""
+    rule = impl[len("sparse_"):] if impl.startswith("sparse_") else impl
+    if rule not in ROBUST_RULES:
+        raise ValueError(f"not a robust mixing_impl: {impl!r} ({ROBUST_IMPLS})")
+    return rule
+
+
+def _robust_reduce(vals, valid, rule: str, trim: int) -> jnp.ndarray:
+    """Per-coordinate order statistic over the valid slots of each row.
+
+    vals: (n, m, D) candidate values per client; valid: (n, m) bool —
+    invalid slots (padding, masked links, absent edges) are ignored, and so
+    are non-finite values per coordinate: a client whose state has blown up
+    (a diverged Byzantine attacker) must not occupy a trim slot forever —
+    that would turn the symmetric b-trim into a permanently asymmetric trim
+    of the honest values, a systematic bias.  Every row should keep ≥ 1
+    finite valid slot per coordinate (the aggregating client itself).
+
+    * ``coord_median`` — midpoint of the two middle order statistics of the
+      k valid values (the even/odd-agnostic median).
+    * ``trimmed_mean`` — mean after dropping the b smallest and b largest
+      values per coordinate, b = min(trim, (k−1)//2) so at least one value
+      always survives (the trim adapts to masked-down neighbor sets).
+
+    k (hence b) is per-(row, coordinate): finiteness varies by coordinate.
+    """
+    if rule not in ROBUST_RULES:
+        raise ValueError(f"unknown robust rule {rule!r}: {ROBUST_RULES}")
+    vals = vals.astype(jnp.float32)
+    n, m, d = vals.shape
+    ok = valid[:, :, None] & jnp.isfinite(vals)              # (n, m, D)
+    k = ok.sum(1).astype(jnp.int32)                          # (n, D) ≥ 1
+    filled = jnp.where(ok, vals, jnp.inf)
+    srt = jnp.sort(filled, axis=1)       # valid ascending, padding (inf) last
+    if rule == "coord_median":
+        lo = jnp.take_along_axis(srt, ((k - 1) // 2)[:, None, :], axis=1)
+        hi = jnp.take_along_axis(srt, (k // 2)[:, None, :], axis=1)
+        return (0.5 * (lo + hi))[:, 0, :]
+    b = jnp.minimum(jnp.int32(trim), (k - 1) // 2)           # (n, D)
+    rank = jnp.arange(m, dtype=jnp.int32)[None, :, None]
+    keep = (rank >= b[:, None, :]) & (rank < (k - b)[:, None, :])
+    # where-then-sum (not multiply) so the inf padding never meets a 0
+    total = jnp.sum(jnp.where(keep, srt, 0.0), axis=1)
+    return total / (k - 2 * b).astype(jnp.float32)
+
+
+def robust_mix_dense(buf, w, *, rule: str, trim: int = 1,
+                     gossip_dtype=None) -> jnp.ndarray:
+    """Robust aggregation of a packed (n, D) buffer over the support of a
+    dense (n, n) W: client i reduces over ``{j : w_ij > 0} ∪ {i}``.
+
+    Mirrors ``mix_dense``'s dtype rules: the communicated values narrow to
+    ``gossip_dtype``, the reduction itself runs in f32.
+    """
+    out_dtype = buf.dtype
+    w = jnp.asarray(w, jnp.float32)
+    n = w.shape[0]
+    bg = (buf.astype(gossip_dtype) if gossip_dtype is not None
+          else buf).astype(jnp.float32)
+    valid = (w > 0.0) | jnp.eye(n, dtype=bool)
+    vals = jnp.broadcast_to(bg[None, :, :], (n, n, bg.shape[1]))
+    return _robust_reduce(vals, valid, rule, trim).astype(out_dtype)
+
+
+def robust_mix_sparse(buf, sp, *, rule: str, trim: int = 1,
+                      gossip_dtype=None) -> jnp.ndarray:
+    """Neighbor-gather form of :func:`robust_mix_dense`: the candidate set
+    is gathered through the padded-CSR neighbor lists — O(n·max_deg·D), no
+    (n, n) array.  Validity comes from ``neighbor_w > 0``, so padding slots
+    and masked links (``sparse_masked_w``) drop out and the self slot is
+    always in; on ``densify``-equal supports this matches the dense form.
+    """
+    out_dtype = buf.dtype
+    bg = (buf.astype(gossip_dtype) if gossip_dtype is not None
+          else buf).astype(jnp.float32)
+    n = sp.neighbor_idx.shape[0]
+    gathered = jnp.take(bg, sp.neighbor_idx, axis=0)         # (n, max_deg, D)
+    vals = jnp.concatenate([bg[:, None, :], gathered], axis=1)
+    valid = jnp.concatenate(
+        [jnp.ones((n, 1), bool), sp.neighbor_w > 0.0], axis=1)
+    return _robust_reduce(vals, valid, rule, trim).astype(out_dtype)
+
+
+def robust_mix_packed(tree: Any, w, *, rule: str, trim: int = 1,
+                      gossip_dtype=None) -> Any:
+    """Tree-level robust aggregation: ravel to (n, D), reduce, unravel.
+    ``w`` dispatches the form — a ``SparseTopology`` takes the neighbor-
+    gather path, anything array-like the dense one."""
+    spec = packing.pack_spec(tree)
+    red = (robust_mix_sparse if isinstance(w, sparse_lib.SparseTopology)
+           else robust_mix_dense)
+    mixed = red(packing.pack(tree, spec), w, rule=rule, trim=trim,
+                gossip_dtype=gossip_dtype)
+    return packing.unpack(mixed, spec)
+
+
 MIXING_IMPLS = ("dense", "ring", "fused_dense", "fused_ring", "pallas_packed",
-                "sparse_packed")
+                "sparse_packed") + ROBUST_IMPLS
 
 
-def make_mixer(topology: str, impl: str, w: np.ndarray, gossip_dtype: str = "float32"):
+def make_mixer(topology: str, impl: str, w: np.ndarray,
+               gossip_dtype: str = "float32", *, trim: int = 1):
     """Returns mix(tree) -> tree for the configured implementation."""
     if impl not in MIXING_IMPLS:
         raise ValueError(f"unknown mixing_impl {impl!r}: {MIXING_IMPLS}")
     gd = None if gossip_dtype in (None, "float32") else jnp.dtype(gossip_dtype)
+    if impl in ROBUST_IMPLS:
+        rule = robust_rule(impl)
+        if impl.startswith("sparse_"):
+            w = (w if isinstance(w, sparse_lib.SparseTopology)
+                 else sparse_lib.from_dense(np.asarray(w)))
+        return lambda tree: robust_mix_packed(tree, w, rule=rule, trim=trim,
+                                              gossip_dtype=gd)
     if impl.endswith("ring"):
         if topology != "ring":
             raise ValueError(
@@ -131,7 +256,8 @@ def make_mixer(topology: str, impl: str, w: np.ndarray, gossip_dtype: str = "flo
     return lambda tree: mix_dense(tree, w, gossip_dtype=gd)
 
 
-def make_traced_mixer(impl: str, gossip_dtype: str = "float32"):
+def make_traced_mixer(impl: str, gossip_dtype: str = "float32", *,
+                      trim: int = 1):
     """Traced-W analogue of :func:`make_mixer`: returns ``mix(tree, w)``
     where W is an operand of the surrounding jit — a per-round *sampled*
     matrix (``repro.core.stochastic_topology``) or a participation-masked
@@ -150,6 +276,13 @@ def make_traced_mixer(impl: str, gossip_dtype: str = "float32"):
             "realize a traced (per-round random or participation-masked) W; "
             "use 'dense', 'fused_dense', or 'pallas_packed'")
     gd = None if gossip_dtype in (None, "float32") else jnp.dtype(gossip_dtype)
+    if impl in ROBUST_IMPLS:
+        # the traced operand is W-as-support: a SparseTopology pytree for
+        # the sparse_* forms, an (n, n) array otherwise — robust_mix_packed
+        # dispatches on it
+        rule = robust_rule(impl)
+        return lambda tree, w: robust_mix_packed(tree, w, rule=rule,
+                                                 trim=trim, gossip_dtype=gd)
     if impl == "sparse_packed":
         # here the traced operand is a SparseTopology pytree, not an array
         return lambda tree, sp: mix_sparse(tree, sp, gossip_dtype=gd)

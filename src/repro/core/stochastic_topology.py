@@ -102,10 +102,24 @@ def erdos_renyi_w(key, n: int, edge_prob) -> jnp.ndarray:
     """One G(n, edge_prob) draw -> MH-weighted mixing matrix.
 
     ``edge_prob`` may be traced (uniform-threshold sampling).
+
+    Draws **one canonical uniform per undirected edge** on the same
+    convention as the sparse sampler
+    (``sparse_topology.make_sparse_w_sampler``): a (n, n−1) uniform where
+    row i's slot s is the draw for i's s-th neighbor in its ascending
+    full-graph neighbor list, and edge {i, j} reads the draw of its
+    lower-indexed endpoint — slot j−1 of row i for j > i.  Same key, same
+    shape, same comparison, so a dense ER draw and a sparse ER draw on the
+    full-graph support realize the identical edge set (parity-pinned by
+    tests/test_adversary.py).
     """
     check_dense_materialization(n, "erdos_renyi_w")
-    u = jax.random.uniform(key, (n, n))
-    upper = jnp.triu(u < edge_prob, k=1)
+    if n < 2:
+        return jnp.eye(max(n, 1), dtype=jnp.float32)
+    u = jax.random.uniform(key, (n, n - 1))
+    # pad[i, j] = u[i, j-1] for j ≥ 1: slot j−1 of row i is edge {i, j}, j > i
+    pad = jnp.concatenate([jnp.zeros((n, 1), u.dtype), u], axis=1)
+    upper = jnp.triu(pad < edge_prob, k=1)
     return metropolis_weights(upper | upper.T)
 
 

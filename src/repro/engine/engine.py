@@ -278,9 +278,13 @@ def run(
             # stats) may be shared across runs, while t0 is per-run
             comp = build.stats["compile_s"] - compile_before
             for rec in records:
-                rec["wall_s"] = round(wall, 1)
-                rec["compile_s"] = round(comp, 2)
-                rec["run_s"] = round(wall - comp, 2)
+                # 3-decimal stamps: 1-decimal rounding collapsed sub-100ms
+                # chunks to wall_s=0.0; run_s clamps at 0 because compile_s
+                # is measured around the AOT build while wall spans this
+                # run, so tiny first-chunk runs could go negative
+                rec["wall_s"] = round(wall, 3)
+                rec["compile_s"] = round(comp, 3)
+                rec["run_s"] = round(max(wall - comp, 0.0), 3)
         history.extend(records)
         for hook in hooks:
             hook(state, records, r)

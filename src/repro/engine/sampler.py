@@ -73,21 +73,24 @@ def make_fixed_batch_sampler(batches, *, local_steps: int, num_clients: int,
     return sample
 
 
-def with_topology(sampler, *, w_fn=None, mask_fn=None):
-    """Rides the churn axes on the engine's sampler slot: wraps a batch
-    sampler so each round also draws that round's mixing matrix and/or
-    participation mask (``repro.core.stochastic_topology`` samplers — pure
-    functions of the round index on the same ``fold_in`` discipline as the
-    data draw, so checkpoint restore replays the identical W/mask sequence).
+def with_topology(sampler, *, w_fn=None, mask_fn=None, attack_fn=None):
+    """Rides the churn and adversary axes on the engine's sampler slot:
+    wraps a batch sampler so each round also draws that round's mixing
+    matrix, participation mask, and/or Byzantine adversary
+    (``repro.core.stochastic_topology`` / ``repro.core.adversary`` samplers
+    — pure functions of the round index on the same ``fold_in`` discipline
+    as the data draw, so checkpoint restore replays the identical
+    W/mask/attack sequence).
 
     The wrapped sampler returns ``(batches, keys, extras)``; the engine
     splats ``extras`` into ``round_step(state, batches, keys, *extras)`` in
-    the order (W, mask) — matching ``make_round_step(traced_w=...,
-    participation=...)``'s extra-operand order.
+    the order (W, mask, adversary) — matching ``make_round_step(traced_w=...,
+    participation=..., byzantine=...)``'s extra-operand order.
     """
-    fns = tuple(f for f in (w_fn, mask_fn) if f is not None)
+    fns = tuple(f for f in (w_fn, mask_fn, attack_fn) if f is not None)
     if not fns:
-        raise ValueError("with_topology needs w_fn and/or mask_fn")
+        raise ValueError(
+            "with_topology needs w_fn, mask_fn, and/or attack_fn")
 
     def sample(round_idx):
         sampled = sampler(round_idx)

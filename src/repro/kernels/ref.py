@@ -121,6 +121,37 @@ def sparse_gossip_ref(neighbor_idx, neighbor_w, self_w, delta, theta, c,
     return theta_new, c_new
 
 
+def robust_agg_ref(vals, valid, *, rule, trim: int = 1):
+    """Robust-aggregation oracle (coordinate median / b-trimmed mean over
+    each row's valid slots) — the ground truth ``mixing.robust_mix_dense``
+    and ``robust_mix_sparse`` are parity-tested against.
+
+    vals: (n, m, D) candidate values; valid: (n, m) bool with ≥ 1 valid
+    slot per row.  Non-finite values are invalid per coordinate (a diverged
+    attacker must not consume a trim slot — ``mixing._robust_reduce``'s
+    contract).  Deliberately a *different* float path from the
+    implementations: the median goes through ``jnp.nanmedian`` and the
+    trimmed mean sorts **descending** (so the surviving values accumulate
+    in the reverse order), which makes agreement a real check rather than
+    the same expression twice.
+    """
+    v32 = vals.astype(jnp.float32)
+    ok = valid[:, :, None] & jnp.isfinite(v32)
+    if rule == "coord_median":
+        return jnp.nanmedian(jnp.where(ok, v32, jnp.nan), axis=1)
+    if rule != "trimmed_mean":
+        raise ValueError(f"unknown robust rule {rule!r}")
+    n, m, d = vals.shape
+    k = ok.sum(1).astype(jnp.int32)                          # (n, D)
+    b = jnp.minimum(jnp.int32(trim), (k - 1) // 2)
+    # invalid -> -inf, ascending sort, reverse: valid descending, pad last
+    desc = jnp.sort(jnp.where(ok, v32, -jnp.inf), axis=1)[:, ::-1]
+    rank = jnp.arange(m, dtype=jnp.int32)[None, :, None]
+    keep = (rank >= b[:, None, :]) & (rank < (k - b)[:, None, :])
+    total = jnp.sum(jnp.where(keep, desc, 0.0), axis=1)
+    return total / (k - 2 * b).astype(jnp.float32)
+
+
 def rglru_ref(a, u):
     """Token-by-token h_t = a_t h_{t-1} + u_t.  a, u: (B,S,W)."""
 

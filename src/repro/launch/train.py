@@ -33,6 +33,7 @@ from repro import engine as engine_lib
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.configs import registry
 from repro.configs.base import AlgorithmConfig, MinimaxConfig
+from repro.core import adversary as adversary_lib
 from repro.core import kgt_minimax as kgt
 from repro.core import mixing as mixing_lib
 from repro.core import objectives, topology
@@ -109,9 +110,14 @@ def train(args) -> dict:
         topology_seed=(getattr(args, "topology_seed", None)
                        if getattr(args, "topology_seed", None) is not None
                        else args.seed),
+        num_byzantine=getattr(args, "num_byzantine", 0),
+        attack=getattr(args, "attack", "sign_flip"),
+        attack_scale=getattr(args, "attack_scale", 1.0),
+        robust_trim=getattr(args, "robust_trim", 1),
     )
     random_w = algo.topology_family != "static"
     part = algo.participation_rate < 1.0
+    byz = algo.num_byzantine > 0
     minimax = MinimaxConfig(num_groups=args.groups, mu=args.mu)
     engine_mode = getattr(args, "engine", "scan")
     chunk_rounds = max(1, min(int(getattr(args, "chunk", 16)),
@@ -145,18 +151,19 @@ def train(args) -> dict:
     sampler = engine_lib.make_dro_sampler(
         dm, kt, local_steps=algo.local_steps, num_clients=algo.num_clients,
         per_client_batch=args.batch, seq_len=args.seq_len, cfg=cfg)
-    if random_w or part:
-        # churn axes ride the sampler slot: per-round W / participation mask
-        # drawn on device from the round index (checkpoint-restore exact)
+    if random_w or part or byz:
+        # churn + adversary axes ride the sampler slot: per-round W /
+        # participation mask / attack drawn on device from the round index
+        # (checkpoint-restore exact)
         if mesh_mode == "decentralized":
             raise ValueError(
-                "--topology-family/--participation are not supported with "
-                "--mesh decentralized yet (the sharded chunk builder bakes "
-                "a static W); run on the host mesh")
+                "--topology-family/--participation/--num-byzantine are not "
+                "supported with --mesh decentralized yet (the sharded chunk "
+                "builder bakes a static W); run on the host mesh")
         topo_key = jax.random.PRNGKey(algo.topology_seed)
         w_fn = None
         if random_w:
-            if algo.mixing_impl == "sparse_packed":
+            if algo.mixing_impl.startswith("sparse_"):
                 # the sampled W rides the extras slot as a SparseTopology
                 # pytree drawn on the support graph's neighbor lists —
                 # no (n, n) array anywhere on the churn path
@@ -178,7 +185,14 @@ def train(args) -> dict:
         if part:
             mask_fn = stoch_lib.make_participation_sampler(
                 algo.num_clients, topo_key, algo.participation_rate)
-        sampler = engine_lib.with_topology(sampler, w_fn=w_fn, mask_fn=mask_fn)
+        attack_fn = None
+        if byz:
+            attack_fn = adversary_lib.make_attack_sampler(
+                algo.num_clients, topo_key,
+                num_byzantine=algo.num_byzantine, attack=algo.attack,
+                scale=algo.attack_scale)
+        sampler = engine_lib.with_topology(
+            sampler, w_fn=w_fn, mask_fn=mask_fn, attack_fn=attack_fn)
     eval_b = engine_lib.held_out_eval_batch(
         dm, jax.random.fold_in(kd, 2), num_clients=algo.num_clients,
         per_client_batch=args.batch, seq_len=args.seq_len, cfg=cfg)
@@ -196,7 +210,8 @@ def train(args) -> dict:
     else:
         round_step = kgt.make_round_step(problem, algo, lr_scale=sched,
                                          traced_w=random_w,
-                                         participation=part)
+                                         participation=part,
+                                         byzantine=byz)
         step = jax.jit(round_step)
         build_chunk = engine_lib.make_chunk_builder(
             round_step, sampler, metrics_fn, log_every=args.log_every)
@@ -208,7 +223,7 @@ def train(args) -> dict:
                         if algo.topology_family == "erdos_renyi" else "")
                      + (f" (drop={algo.client_drop_prob})"
                         if algo.topology_family == "dropout" else ""))
-    elif (algo.mixing_impl == "sparse_packed"
+    elif (algo.mixing_impl.startswith("sparse_")
           and algo.num_clients > stoch_lib.DENSE_MATERIALIZATION_LIMIT):
         # densifying just to report an eigengap defeats the sparse path
         support = sparse_lib.sparse_mixing_matrix(
@@ -220,6 +235,9 @@ def train(args) -> dict:
         topo_part = f"p={topology.spectral_gap(w):.3f}"
     if part:
         topo_part += f", participation={algo.participation_rate}"
+    if byz:
+        topo_part += (f", byzantine={algo.num_byzantine} "
+                      f"({algo.attack} x{algo.attack_scale})")
     print(f"[train] {cfg.name}: {sum(x.size for x in jax.tree.leaves(state.x))/1e6:.2f}M "
           f"client-stacked params, n={algo.num_clients}, K={algo.local_steps}, "
           f"{topo_part}, algo={algo.algorithm}, "
@@ -269,7 +287,7 @@ def _host_loop(args, state, step, sampler, metrics_fn, cfg):
         if t % args.log_every == 0 or t == args.rounds - 1:
             rec = engine_lib.row_to_record(
                 jax.device_get(metrics(state, batches)), t)
-            rec["wall_s"] = round(time.time() - t0, 1)
+            rec["wall_s"] = round(time.time() - t0, 3)
             history.append(rec)
             _print_record(rec)
 
@@ -326,8 +344,23 @@ def main() -> None:
                          "< 1 freezes inactive clients' (theta, c) for the "
                          "round (Bernoulli mask, self-loop fallback)")
     ap.add_argument("--topology-seed", type=int, default=None,
-                    help="seed of the W/mask sampling streams "
+                    help="seed of the W/mask/attack sampling streams "
                          "(default: --seed)")
+    ap.add_argument("--num-byzantine", type=int, default=0,
+                    help="Byzantine clients (ids 0..f-1): their outgoing "
+                         "round deltas are replaced per --attack before "
+                         "gossip (repro.core.adversary); pair with a robust "
+                         "--mixing-impl (coord_median / trimmed_mean) to "
+                         "tolerate them")
+    ap.add_argument("--attack", default="sign_flip",
+                    choices=list(adversary_lib.ATTACKS),
+                    help="Byzantine attack model applied to attackers' "
+                         "outgoing deltas")
+    ap.add_argument("--attack-scale", type=float, default=1.0,
+                    help="attack magnitude multiplier")
+    ap.add_argument("--robust-trim", type=int, default=1,
+                    help="trimmed_mean: neighbor values trimmed per side "
+                         "per coordinate")
     from repro.kernels.ops import GOSSIP_BACKENDS
 
     ap.add_argument("--mixing-impl", default="dense",

@@ -206,15 +206,18 @@ def make_quadratic_traj_sampler(*, local_steps: int, num_clients: int):
 def make_churn_traj_sampler(*, local_steps: int, num_clients: int,
                             family: str, base_w=None,
                             participation: bool = False,
-                            sparse_support=None):
+                            sparse_support=None,
+                            byzantine: bool = False):
     """:func:`make_quadratic_traj_sampler` plus the churn draws: each round
-    also samples the mixing matrix (``family`` ≠ "static") and/or the
-    participation mask from the trajectory's traced ``topo`` bundle.
+    also samples the mixing matrix (``family`` ≠ "static"), the
+    participation mask, and/or the Byzantine adversary from the trajectory's
+    traced ``topo`` bundle.
 
-    The family and the participation flag are static cell properties; the
-    bundle's scalars (topology seed, edge probability, drop probability,
-    participation rate) are trajectory leaves, so e.g. an edge-probability
-    grid axis batches into one compiled cell.  All draws go through
+    The family, the participation flag, and the byzantine flag are static
+    cell properties; the bundle's scalars (topology seed, edge probability,
+    drop probability, participation rate, attacker count/id/scale) are
+    trajectory leaves, so e.g. an edge-probability or attack-type grid axis
+    batches into one compiled cell.  All draws go through
     ``stochastic_topology.round_stream_key`` — pure in the round index —
     which is what keeps the vmapped cell bit-identical to the sequential
     reference and checkpoint restores exact.
@@ -226,6 +229,7 @@ def make_churn_traj_sampler(*, local_steps: int, num_clients: int,
     ``mixing_impl="sparse_packed"`` round step.  ``base_w`` is ignored on
     that path (the support *is* the base topology).
     """
+    from repro.core import adversary as adversary_lib
     from repro.core import sparse_topology as sparse
     from repro.core import stochastic_topology as stoch
 
@@ -258,6 +262,13 @@ def make_churn_traj_sampler(*, local_steps: int, num_clients: int,
             extras.append(stoch.bernoulli_mask(
                 stoch.round_stream_key(tkey, round_idx, stoch.MASK_STREAM),
                 num_clients, topo["rate"]))
+        if byzantine:
+            extras.append(adversary_lib.Adversary(
+                ids=adversary_lib.attack_ids(
+                    num_clients, topo["num_byzantine"], topo["attack_id"]),
+                key=stoch.round_stream_key(
+                    tkey, round_idx, adversary_lib.ATTACK_STREAM),
+                scale=jnp.float32(topo["attack_scale"])))
         return batches, keys, tuple(extras)
 
     return sample

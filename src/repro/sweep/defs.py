@@ -121,6 +121,46 @@ register(GridSpec(
     dedup=True,
 ))
 
+def _pin_honest(p):
+    """The attack type/scale only exist when there are attackers; pinning
+    them at f=0 + dedup collapses the attack axis to one honest baseline
+    per (mixing_impl, seed) instead of three identical replicates."""
+    if p["num_byzantine"] > 0:
+        return {}
+    return {"attack": "honest", "attack_scale": 1.0}
+
+
+# V7 (beyond-paper): Byzantine robustness — f = ⌈n/8⌉ attackers corrupting
+# their outgoing round deltas (repro.core.adversary) against plain mean
+# gossip vs the robust aggregation lowerings (coord_median / trimmed_mean).
+# The aggregation rule is a static cell split (a different mixing program);
+# attacker count / attack id / attack scale are traced bundle leaves, with
+# the num_byzantine axis spanning 0 split on "is the adversary extras slot
+# in the graph" exactly like participation on mask ops.
+#
+# heterogeneity=0 is the classic homogeneous Byzantine setting: the
+# coordinate-wise robust rules pay an irreducible bias ∝ client
+# heterogeneity (trimming heterogeneous honest deltas biases the fixed
+# point — per-client curvature still differs at 0, only the linear terms
+# coincide), so the attacked robust floors clear eps only when that bias
+# is small.  The headline contrast survives at any heterogeneity (plain
+# gossip diverges, robust plateaus); what moves is the plateau.
+register(GridSpec(
+    name="adversary",
+    base=dict(n=8, K=4, sigma=0.0, heterogeneity=0.0, topology="full",
+              eps=0.25, eta_cx=0.01, eta_cy=0.1, eta_s=0.5,
+              max_rounds=600, eval_every=25,
+              attack_scale=3.0, robust_trim=1),
+    axes=(static_axis("mixing_impl", "dense", "coord_median",
+                      "trimmed_mean"),
+          batch_axis("attack", "sign_flip", "large_norm", "random_noise"),
+          batch_axis("num_byzantine", 0, 1,
+                     cell_key=lambda f: f > 0),
+          batch_axis("seed", 0, 1)),
+    derive=_pin_honest,
+    dedup=True,
+))
+
 # CI smoke: 2 seeds × 2 heterogeneity levels, one tiny cell end-to-end
 # (batched path + store write) — scripts/smoke.sh runs this.
 register(GridSpec(

@@ -52,6 +52,7 @@ DEFAULT_POINT: Dict[str, Any] = dict(
     eps=0.3, max_rounds=2000, seed=0, mixing_impl="dense", eval_every=10,
     topology_family="static", edge_prob=0.5, client_drop_prob=0.3,
     participation=1.0,
+    num_byzantine=0, attack="honest", attack_scale=1.0, robust_trim=1,
 )
 
 # Point parameters that change the traced program: same-valued across every
@@ -59,15 +60,25 @@ DEFAULT_POINT: Dict[str, Any] = dict(
 # its *value* is a leaf but sigma>0 toggles the noise ops — grid axes over
 # sigma must declare ``cell_key=lambda s: s > 0``.  participation is the
 # same shape: the rate is a leaf, but participation<1 toggles the mask ops —
-# axes spanning 1.0 declare ``cell_key=lambda r: r < 1``.)
+# axes spanning 1.0 declare ``cell_key=lambda r: r < 1``.  num_byzantine is
+# too: the count/attack id/scale are traced bundle leaves, but f>0 toggles
+# the adversary extras slot — axes spanning 0 declare
+# ``cell_key=lambda f: f > 0``.)
 STATIC_KEYS = ("algorithm", "n", "K", "topology", "mixing_impl",
-               "eps", "max_rounds", "eval_every", "topology_family")
+               "eps", "max_rounds", "eval_every", "topology_family",
+               "robust_trim")
 
 
 def _churn(p: Dict[str, Any]):
     """(samples W per round, applies a participation mask) — both static
     program properties of a cell."""
     return p["topology_family"] != "static", p["participation"] < 1.0
+
+
+def _byz(p: Dict[str, Any]) -> bool:
+    """Whether the cell carries the Byzantine adversary extras slot —
+    a static program property (extras arity)."""
+    return p["num_byzantine"] > 0
 
 
 def _full_point(p: Dict[str, Any]) -> Dict[str, Any]:
@@ -84,7 +95,7 @@ def _cfg(p: Dict[str, Any]) -> AlgorithmConfig:
         algorithm=p["algorithm"], num_clients=p["n"], local_steps=p["K"],
         eta_cx=p["eta_cx"], eta_cy=p["eta_cy"], eta_sx=p["eta_s"],
         eta_sy=p["eta_s"], topology=p["topology"],
-        mixing_impl=p["mixing_impl"])
+        mixing_impl=p["mixing_impl"], robust_trim=p["robust_trim"])
 
 
 # Jitted per-point setup, cached on the static parameters it bakes in.
@@ -140,11 +151,17 @@ def prepare_trajectory(p: Dict[str, Any]):
         lambda v: jnp.broadcast_to(v[None], (p["K"], *v.shape)), cb)
     random_w, part = _churn(p)
     topo = None
-    if random_w or part:
+    if random_w or part or _byz(p):
+        from repro.core import adversary as adversary_lib
+
         topo = {"seed": jnp.int32(p["seed"]),
                 "edge_prob": jnp.float32(p["edge_prob"]),
                 "drop_prob": jnp.float32(p["client_drop_prob"]),
-                "rate": jnp.float32(p["participation"])}
+                "rate": jnp.float32(p["participation"]),
+                "num_byzantine": jnp.int32(p["num_byzantine"]),
+                "attack_id": jnp.int32(
+                    adversary_lib.ATTACK_IDS[p["attack"]]),
+                "attack_scale": jnp.float32(p["attack_scale"])}
     traj = batched_lib.Trajectories(
         state=st, batches=kb, etas=point_etas(_cfg(p)),
         seed=jnp.int32(p["seed"]), active=jnp.asarray(True), topo=topo)
@@ -179,10 +196,12 @@ def _cell_programs(p: Dict[str, Any], *, batched: bool, mesh=None,
     noise = p["sigma"] > 0.0
     problem = quadratic_cell_problem(DX, DY, mu=1.0, noise=noise)
     random_w, part = _churn(p)
+    byz = _byz(p)
     round_step = make_round_step(problem, _cfg(p), traced_etas=True,
-                                 traced_w=random_w, participation=part)
-    if random_w or part:
-        if p["mixing_impl"] == "sparse_packed":
+                                 traced_w=random_w, participation=part,
+                                 byzantine=byz)
+    if random_w or part or byz:
+        if p["mixing_impl"].startswith("sparse_"):
             # the W extras slot carries a SparseTopology pytree — the draw
             # happens on the neighbor lists of the configured support graph,
             # never through an (n, n) array
@@ -190,7 +209,7 @@ def _cell_programs(p: Dict[str, Any], *, batched: bool, mesh=None,
             sampler = batched_lib.make_churn_traj_sampler(
                 local_steps=p["K"], num_clients=p["n"],
                 family=p["topology_family"], participation=part,
-                sparse_support=support)
+                sparse_support=support, byzantine=byz)
         else:
             base_w = (mixing_matrix(p["topology"], p["n"])
                       if p["topology_family"] in ("static", "dropout")
@@ -198,7 +217,7 @@ def _cell_programs(p: Dict[str, Any], *, batched: bool, mesh=None,
             sampler = batched_lib.make_churn_traj_sampler(
                 local_steps=p["K"], num_clients=p["n"],
                 family=p["topology_family"], base_w=base_w,
-                participation=part)
+                participation=part, byzantine=byz)
     else:
         sampler = batched_lib.make_quadratic_traj_sampler(
             local_steps=p["K"], num_clients=p["n"])
@@ -291,6 +310,8 @@ def run_cell(cell: grid_lib.Cell, *, mesh=None,
             bad.append("sigma>0")
         if _churn(p) != _churn(p0):
             bad.append("participation<1")
+        if _byz(p) != _byz(p0):
+            bad.append("num_byzantine>0")
         if bad:
             raise ValueError(
                 f"cell {cell.key!r} mixes static program parameters {bad}; "

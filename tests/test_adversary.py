@@ -1,0 +1,372 @@
+"""Byzantine adversary axis: attack semantics, robust aggregation parity
+against the kernels.ref oracle, round-step invariants under attack, and the
+headline divergence witness (plain gossip dies, trimmed mean survives)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AlgorithmConfig
+from repro.core import (
+    ATTACK_IDS,
+    ATTACKS,
+    Adversary,
+    apply_attack,
+    attack_ids,
+    diagnostics,
+    init_state,
+    make_attack_sampler,
+    make_quadratic_data,
+    make_round_step,
+    mixing_matrix,
+    quadratic_problem,
+)
+from repro.core import adversary as adversary_lib
+from repro.core import sparse_topology as sparse_lib
+from repro.core import stochastic_topology as stoch
+from repro.core.mixing import (
+    ROBUST_RULES,
+    _robust_reduce,
+    robust_mix_dense,
+    robust_mix_sparse,
+)
+from repro.kernels.ref import robust_agg_ref
+
+
+# ---------------------------------------------------------------------------
+# attack semantics
+# ---------------------------------------------------------------------------
+
+def test_attack_ids_prefix():
+    ids = np.asarray(attack_ids(6, 2, ATTACK_IDS["sign_flip"]))
+    np.testing.assert_array_equal(ids, [1, 1, 0, 0, 0, 0])
+    assert ids.dtype == np.int32
+
+
+def _adv(ids, scale=1.0, seed=0):
+    return Adversary(ids=jnp.asarray(ids, jnp.int32),
+                     key=jax.random.PRNGKey(seed),
+                     scale=jnp.float32(scale))
+
+
+def test_apply_attack_per_row_semantics():
+    n, d = 5, 7
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+    tree = {"a": x}
+    adv = _adv([0, 1, 2, 3, 0], scale=2.0)
+    out = apply_attack(adv, tree)["a"]
+    # honest rows bit-untouched even with every attack id present
+    np.testing.assert_array_equal(out[0], x[0])
+    np.testing.assert_array_equal(out[4], x[4])
+    np.testing.assert_allclose(out[1], -2.0 * x[1], rtol=1e-6)
+    np.testing.assert_allclose(
+        out[2], np.full(d, adversary_lib.LARGE_NORM * 2.0), rtol=1e-6)
+    # random_noise: deterministic in the adversary key, not a copy of x
+    out2 = apply_attack(adv, tree)["a"]
+    np.testing.assert_array_equal(out[3], out2[3])
+    assert not np.allclose(out[3], x[3])
+
+
+def test_apply_attack_streams_and_leaves_draw_disjoint_noise():
+    n, d = 3, 16
+    x = jnp.zeros((n, d))
+    adv = _adv([3, 3, 3], scale=1.0)
+    a = apply_attack(adv, {"u": x, "v": x}, stream=0)
+    b = apply_attack(adv, {"u": x, "v": x}, stream=1)
+    # different leaves of one call and the same leaf across streams (Δx vs
+    # Δy) must not share noise
+    assert not np.allclose(a["u"], a["v"])
+    assert not np.allclose(a["u"], b["u"])
+
+
+def test_all_honest_adversary_is_bitwise_identity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 2))
+    out = apply_attack(_adv([0, 0, 0, 0], scale=9.0), {"t": x})["t"]
+    np.testing.assert_array_equal(out, x)
+
+
+def test_make_attack_sampler_fold_in_determinism():
+    fn = make_attack_sampler(4, jax.random.PRNGKey(7), num_byzantine=1,
+                             attack="random_noise", scale=0.5)
+    a, b = fn(jnp.int32(12)), fn(jnp.int32(12))
+    np.testing.assert_array_equal(a.key, b.key)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    assert not np.array_equal(np.asarray(a.key), np.asarray(fn(jnp.int32(13)).key))
+    with pytest.raises(ValueError, match="unknown attack"):
+        make_attack_sampler(4, jax.random.PRNGKey(0), num_byzantine=1,
+                            attack="gaslight")
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation vs the pure-jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", ROBUST_RULES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_robust_reduce_matches_oracle(rule, seed):
+    """Implementation == kernels.ref oracle on random values, random valid
+    masks, and injected non-finite entries (the oracle takes a deliberately
+    different float path: nanmedian / descending sort)."""
+    n, m, d = 6, 8, 11
+    key = jax.random.PRNGKey(seed)
+    vals = jax.random.normal(key, (n, m, d)) * 3.0
+    # sprinkle NaN/±inf: a diverged attacker's contribution
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 1))
+    vals = jnp.where(jax.random.uniform(k1, (n, m, d)) < 0.1, jnp.nan, vals)
+    vals = jnp.where(jax.random.uniform(k2, (n, m, d)) < 0.05, jnp.inf, vals)
+    valid = jax.random.uniform(jax.random.fold_in(key, 2), (n, m)) < 0.7
+    # the self slot is always valid and finite (every row keeps ≥ 1)
+    valid = valid.at[:, 0].set(True)
+    vals = vals.at[:, 0, :].set(jax.random.normal(jax.random.fold_in(key, 3),
+                                                  (n, d)))
+    got = _robust_reduce(vals, valid, rule, 2)
+    want = robust_agg_ref(vals, valid, rule=rule, trim=2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_nonfinite_candidate_does_not_consume_trim_slot():
+    """A NaN/inf neighbor is invalid per coordinate — the b-trim stays
+    symmetric over the finite values instead of permanently spending one
+    top slot on the blown-up client (which would bias every honest mean)."""
+    vals = jnp.asarray([[[jnp.inf], [1.0], [2.0], [3.0]]])   # (1, 4, 1)
+    valid = jnp.ones((1, 4), bool)
+    tm = _robust_reduce(vals, valid, "trimmed_mean", 1)
+    np.testing.assert_allclose(tm, [[2.0]])                  # trims 1 and 3
+    med = _robust_reduce(vals, valid, "coord_median", 1)
+    np.testing.assert_allclose(med, [[2.0]])
+    nanv = vals.at[0, 0, 0].set(jnp.nan)
+    np.testing.assert_allclose(
+        _robust_reduce(nanv, valid, "trimmed_mean", 1), [[2.0]])
+
+
+@pytest.mark.parametrize("rule", ROBUST_RULES)
+def test_robust_sparse_matches_dense_on_same_support(rule):
+    n, d = 16, 9
+    w = jnp.asarray(mixing_matrix("exp", n), jnp.float32)
+    sp = sparse_lib.from_dense(np.asarray(w))
+    buf = jax.random.normal(jax.random.PRNGKey(5), (n, d)) * 2.0
+    buf = buf.at[3].set(jnp.inf)   # one blown-up client rides both forms
+    dense = robust_mix_dense(buf, w, rule=rule, trim=1)
+    sparse = robust_mix_sparse(buf, sp, rule=rule, trim=1)
+    np.testing.assert_allclose(dense, sparse, rtol=1e-5, atol=1e-6)
+
+
+def test_robust_median_ignores_one_outlier_exactly():
+    """With a full support and one arbitrarily corrupted client, the
+    coordinate median of n=5 equal honest values is the honest value."""
+    n, d = 5, 4
+    w = jnp.asarray(mixing_matrix("full", n), jnp.float32)
+    buf = jnp.ones((n, d))
+    buf = buf.at[0].set(-1e9)
+    out = robust_mix_dense(buf, w, rule="coord_median", trim=1)
+    np.testing.assert_allclose(out[1:], np.ones((n - 1, d)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# round-step invariants under attack
+# ---------------------------------------------------------------------------
+
+def _byz_setup(n=6, k=2, mixing_impl="dense", topology="ring", het=1.0):
+    key = jax.random.PRNGKey(0)
+    data = make_quadratic_data(key, n, dx=5, dy=3, heterogeneity=het)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, eta_sx=0.4, eta_sy=0.4,
+                          topology=topology, mixing_impl=mixing_impl)
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    return prob, cfg, stt, kb
+
+
+@pytest.mark.parametrize("mixing_impl", ["dense", "sparse_packed"])
+@pytest.mark.parametrize("attack", ["sign_flip", "large_norm", "random_noise"])
+def test_sum_c_zero_under_attack_linear_gossip(mixing_impl, attack):
+    """The attacker follows the protocol with its corrupted Δ, so under any
+    linear doubly stochastic W the Σ_i c_i = 0 telescoping survives every
+    attack — an attacked Δ is still just a Δ."""
+    n, k = 6, 2
+    prob, cfg, stt, kb = _byz_setup(n=n, k=k, mixing_impl=mixing_impl)
+    step = jax.jit(make_round_step(prob, cfg, byzantine=True))
+    fn = make_attack_sampler(n, jax.random.PRNGKey(2), num_byzantine=2,
+                             attack=attack, scale=2.0)
+    for t in range(3):
+        keys = jax.random.split(jax.random.PRNGKey(t), k * n).reshape(k, n, 2)
+        stt = step(stt, kb, keys, fn(jnp.int32(t)))
+    for c in (stt.cx, stt.cy):
+        mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
+        assert float(jnp.abs(mean_c).max()) < 1e-3
+
+
+@pytest.mark.parametrize("mixing_impl", ["dense", "trimmed_mean",
+                                         "sparse_coord_median"])
+def test_inactive_clients_freeze_bit_exactly_under_attack(mixing_impl):
+    """Participation composes with the adversary slot: inactive clients —
+    attackers included — freeze (θ, c) bit-exactly on the linear AND the
+    robust epilogues."""
+    n, k = 6, 2
+    prob, cfg, stt, kb = _byz_setup(n=n, k=k, mixing_impl=mixing_impl,
+                                    topology="full")
+    step = jax.jit(make_round_step(prob, cfg, participation=True,
+                                   byzantine=True))
+    fn = make_attack_sampler(n, jax.random.PRNGKey(4), num_byzantine=2,
+                             attack="sign_flip", scale=3.0)
+    mask = jnp.asarray([True, False, True, False, True, True])
+    keys = jax.random.split(jax.random.PRNGKey(9), k * n).reshape(k, n, 2)
+    out = step(stt, kb, keys, mask, fn(jnp.int32(0)))
+    inactive = ~np.asarray(mask)
+    for name in ("x", "y", "cx", "cy"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out, name))[inactive],
+            np.asarray(getattr(stt, name))[inactive], err_msg=name)
+
+
+@pytest.mark.parametrize("mixing_impl", ["dense", "trimmed_mean"])
+def test_honest_adversary_extra_matches_plain_step(mixing_impl):
+    """An all-honest Adversary extra is a bitwise no-op — the byzantine=True
+    program with ids ≡ 0 equals the plain program, on the linear and the
+    robust epilogue alike."""
+    n, k = 4, 2
+    prob, cfg, stt, kb = _byz_setup(n=n, k=k, mixing_impl=mixing_impl,
+                                    topology="full")
+    keys = jax.random.split(jax.random.PRNGKey(1), k * n).reshape(k, n, 2)
+    plain = jax.jit(make_round_step(prob, cfg))(stt, kb, keys)
+    honest = jax.jit(make_round_step(prob, cfg, byzantine=True))(
+        stt, kb, keys, _adv([0] * n, scale=5.0))
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(honest)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_with_topology_extras_order_and_nesting_guard():
+    """Sampler extras arrive as (W, mask, adversary) — the exact operand
+    order of make_round_step — and nesting wrappers raises instead of
+    silently dropping the inner draws."""
+    from repro.engine import sampler as sampler_lib
+
+    n = 4
+    base = lambda r: ("batches", "keys")
+    w_fn = stoch.make_w_sampler("erdos_renyi", n, jax.random.PRNGKey(0),
+                                edge_prob=0.6)
+    mask_fn = stoch.make_participation_sampler(n, jax.random.PRNGKey(1), 0.8)
+    attack_fn = make_attack_sampler(n, jax.random.PRNGKey(2),
+                                    num_byzantine=1, attack="sign_flip")
+    wrapped = sampler_lib.with_topology(base, w_fn=w_fn, mask_fn=mask_fn,
+                                        attack_fn=attack_fn)
+    _, _, extras = wrapped(jnp.int32(3))
+    assert len(extras) == 3
+    assert extras[0].shape == (n, n)
+    assert extras[1].shape == (n,) and extras[1].dtype == bool
+    assert isinstance(extras[2], Adversary)
+    # mask-only and attack-only wrappers keep relative order
+    _, _, extras = sampler_lib.with_topology(
+        base, attack_fn=attack_fn)(jnp.int32(0))
+    assert len(extras) == 1 and isinstance(extras[0], Adversary)
+    with pytest.raises(ValueError, match="needs w_fn"):
+        sampler_lib.with_topology(base)
+    with pytest.raises(ValueError, match="nesting"):
+        sampler_lib.with_topology(wrapped, mask_fn=mask_fn)(jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# the headline: divergence witness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sign_flip_kills_plain_gossip_but_not_trimmed_mean():
+    """f=1 sign-flip attacker at n=8 (the bench_adversary setting): plain
+    dense gossip blows up while the trimmed-mean lowering still drives
+    ‖∇Φ‖ under the sweep's ε = 0.25."""
+    n, k = 8, 4
+    res = {}
+    for impl in ("dense", "trimmed_mean"):
+        key = jax.random.PRNGKey(0)
+        data = make_quadratic_data(key, n, dx=10, dy=5, heterogeneity=0.0)
+        prob = quadratic_problem(data, sigma=0.0)
+        cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                              eta_cy=0.1, eta_sx=0.5, eta_sy=0.5,
+                              topology="full", mixing_impl=impl)
+        cb = {kk: v for kk, v in data.items() if kk != "mu"}
+        kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)),
+                          cb)
+        stt = init_state(prob, cfg, key, init_batch=cb,
+                         init_keys=jax.random.split(key, n))
+        step = jax.jit(make_round_step(prob, cfg, byzantine=True))
+        fn = make_attack_sampler(n, jax.random.PRNGKey(3), num_byzantine=1,
+                                 attack="sign_flip", scale=3.0)
+        rounds = 150 if impl == "dense" else 900
+        grad = np.inf
+        for t in range(rounds):
+            keys = jax.random.split(jax.random.PRNGKey(t),
+                                    k * n).reshape(k, n, 2)
+            stt = step(stt, kb, keys, fn(jnp.int32(t)))
+            if impl == "trimmed_mean" and (t + 1) % 50 == 0:
+                grad = float(diagnostics(prob, stt)["phi_grad_norm"])
+                if grad < 0.25:
+                    break
+        res[impl] = (grad if impl == "trimmed_mean"
+                     else float(diagnostics(prob, stt)["phi_grad_norm"]))
+    assert res["trimmed_mean"] < 0.25
+    assert not np.isfinite(res["dense"]) or res["dense"] > 10.0
+
+
+# ---------------------------------------------------------------------------
+# dense-vs-sparse Erdős–Rényi draw parity (the churn-bench correctness fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("edge_prob", [0.2, 0.5, 0.8])
+def test_erdos_renyi_dense_matches_sparse_on_full_support(edge_prob):
+    """The dense ER sampler draws one canonical uniform per undirected edge
+    on the sparse sampler's convention (slot j−1 of row i for j > i), so the
+    same key realizes the *identical edge set* on both paths; the MH
+    off-diagonal weights are bit-equal and the diagonal leftover mass agrees
+    to summation-order rounding."""
+    n = 10
+    key = jax.random.PRNGKey(11)
+    dense_fn = stoch.make_w_sampler("erdos_renyi", n, key,
+                                    edge_prob=edge_prob)
+    support = sparse_lib.from_dense(np.asarray(mixing_matrix("full", n)))
+    sparse_fn = sparse_lib.make_sparse_w_sampler("erdos_renyi", support, key,
+                                                 edge_prob=edge_prob)
+    off = ~np.eye(n, dtype=bool)
+    for r in (0, 7, 123):
+        wd = np.asarray(dense_fn(jnp.int32(r)))
+        ws = np.asarray(sparse_lib.densify(sparse_fn(jnp.int32(r))))
+        np.testing.assert_array_equal(wd[off] > 0, ws[off] > 0)
+        np.testing.assert_array_equal(wd[off], ws[off])
+        np.testing.assert_allclose(np.diag(wd), np.diag(ws), atol=1e-6)
+
+
+def test_erdos_renyi_edge_draw_is_symmetric():
+    """Edge {i, j} reads exactly one uniform: the realized adjacency (and
+    hence W) is symmetric draw-by-draw, not just in distribution."""
+    n = 9
+    fn = stoch.make_w_sampler("erdos_renyi", n, jax.random.PRNGKey(5),
+                              edge_prob=0.5)
+    for r in range(4):
+        w = np.asarray(fn(jnp.int32(r)))
+        np.testing.assert_array_equal(w, w.T)
+
+
+# ---------------------------------------------------------------------------
+# sweep spec wiring
+# ---------------------------------------------------------------------------
+
+def test_adversary_sweep_partition():
+    """The adversary grid splits into (3 impls × byz on/off) cells; the
+    honest regime dedups its attack axis to one baseline per (impl, seed)."""
+    from repro.sweep import defs
+    from repro.sweep import run as sweep_run
+
+    spec = defs.SWEEPS["adversary"]
+    pts = spec.points()
+    assert len(pts) == 3 * 3 * 2 + 3 * 2        # attacked + honest-dedup
+    cells = spec.cells()
+    assert len(cells) == 6
+    for cell in cells:
+        full = [sweep_run._full_point(p) for p in cell.points]
+        assert len({sweep_run._byz(p) for p in full}) == 1
+        for k in sweep_run.STATIC_KEYS:
+            assert len({p[k] for p in full}) == 1, (cell.key, k)
+    honest = [p for p in pts if p["num_byzantine"] == 0]
+    assert {p["attack"] for p in honest} == {"honest"}

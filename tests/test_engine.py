@@ -47,10 +47,11 @@ def _setup(algo="kgt_minimax", mixing_impl="dense", topology="ring",
 
 
 def _churn_setup(family="erdos_renyi", rate=0.7, mixing_impl="dense",
-                 n=4, K=3, sigma=0.3, seed=0):
-    """_setup plus the churn axes: a per-round sampled W (and participation
-    mask when rate < 1) riding the sampler slot via with_topology, and a
-    round_step taking them as traced operands."""
+                 n=4, K=3, sigma=0.3, seed=0, byz=0, attack="sign_flip"):
+    """_setup plus the churn/adversary axes: a per-round sampled W (and
+    participation mask when rate < 1, and Byzantine adversary when byz > 0)
+    riding the sampler slot via with_topology, and a round_step taking them
+    as traced operands."""
     key = jax.random.PRNGKey(seed)
     data = make_quadratic_data(key, n, dx=6, dy=3, heterogeneity=1.5)
     prob = quadratic_problem(data, sigma=sigma)
@@ -64,7 +65,7 @@ def _churn_setup(family="erdos_renyi", rate=0.7, mixing_impl="dense",
                     init_keys=jax.random.split(key, n))
     part = rate < 1.0
     step = make_round_step(prob, cfg, traced_w=(family != "static"),
-                           participation=part)
+                           participation=part, byzantine=byz > 0)
     base = engine_lib.make_fixed_batch_sampler(
         kb, local_steps=K, num_clients=n, seed=seed)
     tkey = jax.random.PRNGKey(seed * 31 + 7)
@@ -74,7 +75,14 @@ def _churn_setup(family="erdos_renyi", rate=0.7, mixing_impl="dense",
             family, n, tkey, base_w=mixing_matrix("full", n),
             edge_prob=0.5, client_drop_prob=0.3)
     mask_fn = stoch.make_participation_sampler(n, tkey, rate) if part else None
-    sampler = engine_lib.with_topology(base, w_fn=w_fn, mask_fn=mask_fn)
+    attack_fn = None
+    if byz:
+        from repro.core import adversary as adversary_lib
+
+        attack_fn = adversary_lib.make_attack_sampler(
+            n, tkey, num_byzantine=byz, attack=attack, scale=2.0)
+    sampler = engine_lib.with_topology(base, w_fn=w_fn, mask_fn=mask_fn,
+                                       attack_fn=attack_fn)
     return prob, st, step, sampler
 
 
@@ -135,6 +143,45 @@ def test_engine_matches_host_loop_stochastic_topology(family, rate,
     st_engine, _ = engine_lib.run(st, build, total_rounds=7, chunk_rounds=3)
     st_host = _host_loop(st, step, sampler, 7)
     _assert_states_equal(st_engine, st_host, f"{family}/{rate}/{mixing_impl}")
+
+
+@pytest.mark.parametrize("family,rate,byz,attack", [
+    ("static", 1.0, 1, "sign_flip"),            # adversary-only extra
+    ("erdos_renyi", 0.7, 2, "random_noise"),    # all three extras at once
+])
+def test_engine_matches_host_loop_byzantine(family, rate, byz, attack):
+    """The adversary on the sampler slot: per-round attack draws inside the
+    scanned chunk == the per-round host loop, bit for bit — alone and
+    stacked with the W and participation extras (order W, mask, adversary)."""
+    prob, st, step, sampler = _churn_setup(family=family, rate=rate,
+                                           byz=byz, attack=attack)
+    build = engine_lib.make_chunk_builder(step, sampler, donate=False)
+    st_engine, _ = engine_lib.run(st, build, total_rounds=7, chunk_rounds=3)
+    st_host = _host_loop(st, step, sampler, 7)
+    _assert_states_equal(st_engine, st_host, f"byz/{family}/{attack}")
+
+
+def test_wall_clock_stamps_are_millisecond_grained_and_nonnegative():
+    """Every history record carries wall_s/compile_s/run_s at 3-decimal
+    (millisecond) resolution — 1-decimal rounding used to collapse sub-100ms
+    chunks to wall_s = 0.0 — with run_s clamped at ≥ 0 (compile_s is
+    measured around the AOT build, wall per run, so tiny first chunks could
+    go negative) and wall_s nondecreasing across chunk boundaries."""
+    prob, st, step, sampler = _setup()
+    build = engine_lib.make_chunk_builder(
+        step, sampler, engine_lib.quadratic_metrics_fn(prob),
+        log_every=1, donate=False)
+    _, history = engine_lib.run(st, build, total_rounds=6, chunk_rounds=2)
+    assert len(history) == 6
+    prev_wall = 0.0
+    for rec in history:
+        for stamp in ("wall_s", "compile_s", "run_s"):
+            assert rec[stamp] == round(rec[stamp], 3), (stamp, rec)
+            assert rec[stamp] >= 0.0, (stamp, rec)
+        assert rec["wall_s"] >= prev_wall
+        prev_wall = rec["wall_s"]
+    # the first run compiles: its elapsed time cannot round to zero
+    assert history[-1]["wall_s"] > 0.0
 
 
 def test_checkpoint_restore_resumes_stochastic_topology(tmp_path):

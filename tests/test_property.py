@@ -350,6 +350,112 @@ def test_participation_invariants_packed_engine(n, mask_bits, seed):
                                    mixing_impl="pallas_packed")
 
 
+# ---------------------------------------------------------------------------
+# Byzantine adversary axis (the robust-aggregation tentpole)
+# ---------------------------------------------------------------------------
+
+@given(attack=st.sampled_from(["sign_flip", "large_norm", "random_noise"]),
+       n=st.integers(3, 8), f=st.integers(1, 2), scale=st.floats(0.5, 4.0),
+       seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_sum_c_zero_under_any_attack_linear_gossip(attack, n, f, scale,
+                                                   seed):
+    """The attacker follows the protocol with its corrupted Δ, so Σ_i c_i =
+    0 survives every attack under linear doubly stochastic gossip — an
+    attacked Δ is still just a Δ.  (The robust aggregations deliberately
+    give this identity up; see the freeze property below for their check.)"""
+    from repro.core import adversary as adversary_lib
+
+    k = 2
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=5, dy=3, heterogeneity=1.0)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, eta_sx=0.4, eta_sy=0.4,
+                          topology="ring")
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = make_round_step(prob, cfg, byzantine=True)
+    fn = adversary_lib.make_attack_sampler(
+        n, key, num_byzantine=min(f, n - 1), attack=attack, scale=scale)
+    for t in range(2):
+        keys = jax.random.split(jax.random.PRNGKey(t), k * n).reshape(k, n, 2)
+        stt = step(stt, kb, keys, fn(jnp.int32(t)))
+    for c in (stt.cx, stt.cy):
+        cl = jax.tree.leaves(c)[0]
+        # large_norm at scale 4 drives |c| to ~1e4 — the f32 mean's rounding
+        # floor scales with the correction magnitude, so the tolerance does
+        mean_c = float(jnp.abs(cl.mean(0)).max())
+        assert mean_c < 1e-5 * (1.0 + float(jnp.abs(cl).max()))
+
+
+@given(impl=st.sampled_from(["dense", "coord_median", "trimmed_mean",
+                             "sparse_trimmed_mean"]),
+       attack=st.sampled_from(["sign_flip", "large_norm", "random_noise"]),
+       mask_bits=st.integers(0, 2**6 - 1), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_inactive_freeze_under_attack_any_aggregation(impl, attack,
+                                                      mask_bits, seed):
+    """Participation composes with the adversary slot on every epilogue —
+    linear, dense-robust, and sparse-robust alike: an inactive client
+    (attacker or honest) freezes (θ, c) bit-exactly for ANY mask, attack,
+    and aggregation rule."""
+    from repro.core import adversary as adversary_lib
+
+    n, k = 6, 2
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=4, dy=2, heterogeneity=1.0)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, eta_sx=0.4, eta_sy=0.4,
+                          topology="full", mixing_impl=impl)
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = make_round_step(prob, cfg, participation=True, byzantine=True)
+    fn = adversary_lib.make_attack_sampler(n, key, num_byzantine=2,
+                                           attack=attack, scale=3.0)
+    mask = jnp.asarray([(mask_bits >> i) & 1 == 1 for i in range(n)])
+    keys = jax.random.split(jax.random.PRNGKey(seed), k * n).reshape(k, n, 2)
+    out = step(stt, kb, keys, mask, fn(jnp.int32(0)))
+    inactive = ~np.asarray(mask)
+    for name in ("x", "y", "cx", "cy"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out, name))[inactive],
+            np.asarray(getattr(stt, name))[inactive],
+            err_msg=f"{impl}/{attack}:{name}")
+
+
+@given(rule=st.sampled_from(["coord_median", "trimmed_mean"]),
+       trim=st.integers(1, 3), n=st.integers(2, 8), d=st.integers(1, 9),
+       seed=st.integers(0, 200))
+@settings(max_examples=15, deadline=None)
+def test_robust_reduce_oracle_parity_property(rule, trim, n, d, seed):
+    """mixing._robust_reduce == kernels.ref.robust_agg_ref for arbitrary
+    shapes, valid masks, and injected non-finite values (the oracle takes a
+    different float path — nanmedian / descending sort)."""
+    from repro.core.mixing import _robust_reduce
+    from repro.kernels.ref import robust_agg_ref
+
+    m = n + 1
+    key = jax.random.PRNGKey(seed)
+    vals = jax.random.normal(key, (n, m, d)) * 2.0
+    vals = jnp.where(
+        jax.random.uniform(jax.random.fold_in(key, 1), (n, m, d)) < 0.15,
+        jnp.inf, vals)
+    valid = jax.random.uniform(jax.random.fold_in(key, 2), (n, m)) < 0.6
+    valid = valid.at[:, 0].set(True)
+    vals = vals.at[:, 0, :].set(
+        jax.random.normal(jax.random.fold_in(key, 3), (n, d)))
+    np.testing.assert_allclose(
+        _robust_reduce(vals, valid, rule, trim),
+        robust_agg_ref(vals, valid, rule=rule, trim=trim),
+        rtol=1e-5, atol=1e-6)
+
+
 @given(family=st.sampled_from(["erdos_renyi", "pairwise", "dropout"]),
        n=st.integers(2, 6), edge_prob=st.floats(0.1, 0.9),
        rate=st.floats(0.0, 1.0), seed=st.integers(0, 200))

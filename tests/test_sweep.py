@@ -391,6 +391,7 @@ def test_paper_sweep_defs_partition_as_documented():
         "speedup": 4,          # n static
         "convergence": 4,      # algorithm static, 8 seeds batched
         "churn": 8,            # family static x participation cell split
+        "adversary": 6,        # mixing_impl static x byzantine cell split
         "smoke": 1,
     }
     for name, n_cells in expected_cells.items():
@@ -406,6 +407,9 @@ def test_paper_sweep_defs_partition_as_documented():
     # churn: edge_prob only varies the erdos_renyi family (8 points); the
     # other three families dedup to participation x seed (4 each)
     assert len(defs.SWEEPS["churn"].points()) == 8 + 3 * 4
+    # adversary: the attack axis only varies the attacked regime (f=0 pins
+    # attack="honest"), so 3 impls x (3 attacks x 2 seeds + 2 honest seeds)
+    assert len(defs.SWEEPS["adversary"].points()) == 3 * (3 * 2 + 2)
 
 
 def test_replicate_row_helpers():
@@ -425,6 +429,28 @@ def test_replicate_row_helpers():
     assert row["final_grad_mean"] == pytest.approx(0.6)
     assert row["hit_rate"] == 0.5
     assert row["rounds_to_eps_mean"] == 10.0
+
+
+def test_churn_static_baseline_selected_structurally():
+    """Regression for the bench_churn headline lookup: the static baseline
+    must be found by its fields, not by a hard-coded "static@1.0" label —
+    labels embed edge_prob whenever a family carries more than one."""
+    from benchmarks.bench_churn import static_baseline
+
+    rows = {
+        "static(edge_prob=0.3)@0.7": {"topology_family": "static",
+                                      "participation": 0.7,
+                                      "final_grad_mean": 0.5},
+        "static(edge_prob=0.3)@1.0": {"topology_family": "static",
+                                      "participation": 1.0,
+                                      "final_grad_mean": 0.2},
+        "erdos_renyi@1.0": {"topology_family": "erdos_renyi",
+                            "participation": 1.0, "final_grad_mean": 0.3},
+        "_summary": {"worst_final_mean": 0.5},
+    }
+    assert static_baseline(rows)["final_grad_mean"] == 0.2
+    with pytest.raises(KeyError, match="static"):
+        static_baseline({"_summary": {}})
 
 
 # ---------------------------------------------------------------------------
