@@ -7,9 +7,11 @@ Prints ``name,key=value,...`` CSV lines and writes results/benchmarks.json
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run convergence topology
+  PYTHONPATH=src python -m benchmarks.run --benches gossip,engine
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -55,8 +57,28 @@ def _provenance() -> dict:
     return sweep_store.provenance()
 
 
+def _parse_names(argv) -> list:
+    """Positional names and/or ``--benches a,b,c`` (union, order-preserving,
+    unknown names rejected up front instead of KeyError-ing mid-run)."""
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("names", nargs="*", help="benchmarks to run (default all)")
+    ap.add_argument("--benches", default=None, metavar="A,B,...",
+                    help="comma-separated benchmark filter")
+    args = ap.parse_args(argv)
+    names = list(args.names)
+    if args.benches:
+        names += [s for s in args.benches.split(",") if s]
+    seen = set()
+    names = [n for n in names if not (n in seen or seen.add(n))]
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; choose from "
+                 f"{sorted(BENCHES)}")
+    return names or list(BENCHES)
+
+
 def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+    names = _parse_names(sys.argv[1:])
     results = {}
     failures = {}
     for name in names:

@@ -21,13 +21,19 @@
 #      under a sign-flip attacker: honest clients stay finite, an all-honest
 #      adversary extra is bit-identical to the plain step, and the robust
 #      reduce matches the kernels.ref oracle (bench_adversary --smoke).
-#   7. benchmarks.run gossip scale engine — the round-epilogue bench
-#      (collective counts per mixing_impl), the clients-axis scaling bench
-#      (sparse edge-proportional cost up to n=4096, sub-quadratic slope),
-#      and the engine bench (rounds/s: per-round host dispatch vs scanned
-#      chunks), merged into results/benchmarks.json.  (`benchmarks.run
-#      sweep` runs the heavier batched-vs-sequential sweep bench; it is
-#      registered but not part of the smoke.)
+#   7. fused-round smoke — the whole-round Pallas kernel: the
+#      interpret-vs-oracle parity tests (tests/test_fused_round.py) plus
+#      bench_gossip --smoke, which times every round lowering (including
+#      dense_round vs fused_round on the quadratic workload) and checks the
+#      pallas_packed interpret/xla parity row.
+#   8. benchmarks.run --benches scale,engine — the clients-axis scaling
+#      bench (sparse edge-proportional cost up to n=4096, sub-quadratic
+#      slope) and the engine bench (rounds/s: per-round host dispatch vs
+#      scanned chunks), merged into results/benchmarks.json.  (`benchmarks
+#      .run sweep` runs the heavier batched-vs-sequential sweep bench, and
+#      plain `benchmarks.run gossip` the full gossip bench with the
+#      collectives subprocess + block_d autotune; both are registered but
+#      not part of the smoke.)
 #
 # Usage: scripts/smoke.sh [--archs ARCH ...]     (default: qwen2-0.5b)
 set -euo pipefail
@@ -81,7 +87,11 @@ python -m benchmarks.bench_scale --smoke
 echo "== adversary smoke (one Byzantine trimmed_mean round, sign-flip attacker) =="
 python -m benchmarks.bench_adversary --smoke
 
-echo "== gossip + scale + engine benches (merged into results/benchmarks.json) =="
-python -m benchmarks.run gossip scale engine
+echo "== fused-round smoke (kernel parity + round-lowering bench) =="
+python -m pytest -q tests/test_fused_round.py
+python -m benchmarks.bench_gossip --smoke
+
+echo "== scale + engine benches (merged into results/benchmarks.json) =="
+python -m benchmarks.run --benches scale,engine
 
 echo "smoke ok"

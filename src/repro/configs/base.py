@@ -212,6 +212,13 @@ class AlgorithmConfig:
     # or "xla".
     gossip_backend: str = "auto"
     gossip_dtype: str = "float32"   # beyond-paper: "bfloat16" halves gossip bytes
+    # Error-feedback compressed gossip (Sun & Wei's communication-efficient
+    # federated minimax line): quantize the transmitted round delta with a
+    # deterministic quantizer ("bf16" | "int8") and carry the quantization
+    # residual as per-client EF state (KGTState.ef_x/ef_y).  None = exact.
+    # Valid only for the packed lowerings (mixing_impl "pallas_packed" /
+    # "fused_round") — the per-leaf impls have no packed buffer to quantize.
+    gossip_compress: Optional[str] = None
     # Inner optimizer applied to local steps ("sgd" is the faithful Algorithm 1).
     inner_opt: str = "sgd"
     # Correction-state dtype: bfloat16 halves tracking-state memory (the

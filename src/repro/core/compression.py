@@ -1,0 +1,73 @@
+"""Error-feedback gossip compression over packed ``(n, D)`` buffers.
+
+Algorithm 1 transmits the round delta Δ twice per variable (the Δ-gossip of
+lines 7–8 and, folded into the parameter gossip, η_s·WΔ).  The compressed
+path replaces the *transmitted* Δ with its deterministic quantize-dequantize
+image and keeps the quantization error as per-client error-feedback state:
+
+    v   = Δ + e                      (delta plus carried residual)
+    q   = Q(v)                       (what goes on the wire — bf16 or int8)
+    e'  = v − q                      (next round's residual; EXACT in f32,
+                                      see repro.kernels.quantize)
+
+Every downstream use of Δ — the correction update ``c += ±(q − Wq)/(K·η_c)``
+and the parameter mixing ``θ ← Wθ + η_s·Wq`` — consumes the same ``q``, so
+for any doubly stochastic W the Lemma-8 telescoping survives compression
+bit-for-bit in expectation and to the f32 noise floor in sum:
+Σᵢ(q − Wq)ᵢ = Σq − ΣWq = 0 exactly as for the uncompressed Δ.
+
+Participation composes: an inactive client must put *nothing* on the wire
+(its masked Δ is zero but its carried residual generally is not), so the
+transmit value is masked to zero and the residual frozen —
+``kgt_minimax._freeze_inactive`` then pins the EF leaf bit-exactly like the
+rest of the client's state.
+
+The EF residual is a first-class ``KGTState`` leaf (``ef_x``/``ef_y``,
+packed ``(n, D)`` f32 in ``core.packing`` layout), so engine chunking,
+checkpoint save/restore, and the sweep's vmapped trajectories carry it with
+the same bit-identity discipline as (θ, c).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.quantize import QUANT_METHODS, quantize_dequant
+
+# Config values for AlgorithmConfig.gossip_compress (None = exact gossip).
+COMPRESS_METHODS = QUANT_METHODS
+
+
+def validate_method(method: Optional[str]) -> Optional[str]:
+    """None / "none" -> None; otherwise a known quantizer name."""
+    if method in (None, "none", ""):
+        return None
+    if method not in COMPRESS_METHODS:
+        raise ValueError(
+            f"unknown gossip_compress {method!r}: {COMPRESS_METHODS}")
+    return method
+
+
+def ef_transmit(delta_buf, ef_buf, method: str,
+                mask=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(Δ, e) -> (q, e') per the protocol above.  All ``(n, D)`` f32.
+
+    ``mask`` (optional ``(n,)``): inactive rows transmit exact zeros and
+    keep their residual unchanged (Δ is already zeroed for them by
+    ``_tree_mask_clients``; without the mask their *residual* would leak
+    onto the wire).
+    """
+    v = delta_buf.astype(jnp.float32) + ef_buf.astype(jnp.float32)
+    if mask is not None:
+        v = v * mask.astype(jnp.float32)[:, None]
+    q = quantize_dequant(v, method)
+    e_new = v - q
+    if mask is not None:
+        e_new = jnp.where(mask.astype(bool)[:, None], e_new, ef_buf)
+    return q, e_new
+
+
+def init_ef(n: int, dim: int) -> jnp.ndarray:
+    """Zero residual: round 0 transmits Q(Δ) with nothing carried."""
+    return jnp.zeros((n, dim), jnp.float32)

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.configs.base import AlgorithmConfig
 from repro.core import adversary as adversary_lib
+from repro.core import compression as compression_lib
 from repro.core import mixing as mixing_lib
 from repro.core import packing
 from repro.core import sparse_topology as sparse_lib
@@ -48,6 +49,13 @@ class KGTState:
     cx: Any         # (n, …) gradient-tracking correction for x
     cy: Any         # (n, …) gradient-tracking correction for y
     round: jnp.ndarray  # scalar int32
+    # Error-feedback residuals for compressed gossip (cfg.gossip_compress):
+    # packed (n, D) f32 buffers in core.packing layout, one per variable.
+    # None (an empty pytree node) when compression is off, so exact-gossip
+    # states keep their historical leaf structure — old checkpoints restore
+    # unchanged and the engine's template validation sees identical trees.
+    ef_x: Any = None
+    ef_y: Any = None
 
 
 def _tree_axpy(a: float, x_tree, y_tree):
@@ -99,7 +107,11 @@ def _freeze_inactive(mask, new_state: "KGTState", old_state: "KGTState"):
         y=pick(new_state.y, old_state.y),
         cx=pick(new_state.cx, old_state.cx),
         cy=pick(new_state.cy, old_state.cy),
-        round=new_state.round)
+        round=new_state.round,
+        # EF residuals freeze with the rest of the inactive client's state
+        # (tree.map over None is a no-op for the uncompressed case)
+        ef_x=pick(new_state.ef_x, old_state.ef_x),
+        ef_y=pick(new_state.ef_y, old_state.ef_y))
 
 
 def init_state(
@@ -133,7 +145,14 @@ def init_state(
         cd = jnp.dtype(cfg.correction_dtype)
         cx = jax.tree.map(lambda c: c.astype(cd), cx)
         cy = jax.tree.map(lambda c: c.astype(cd), cy)
-    return KGTState(x=x, y=y, cx=cx, cy=cy, round=jnp.int32(0))
+    ef_x = ef_y = None
+    if compression_lib.validate_method(cfg.gossip_compress) is not None:
+        # zero EF residual per variable, packed (n, D) — round 0 transmits
+        # Q(Δ) with nothing carried
+        ef_x = compression_lib.init_ef(n, packing.pack_spec(x).dim)
+        ef_y = compression_lib.init_ef(n, packing.pack_spec(y).dim)
+    return KGTState(x=x, y=y, cx=cx, cy=cy, round=jnp.int32(0),
+                    ef_x=ef_x, ef_y=ef_y)
 
 
 def point_etas(cfg: AlgorithmConfig) -> dict:
@@ -244,6 +263,25 @@ def make_round_step(
     # sparse_w: W is a SparseTopology everywhere a dense array would appear
     sparse_w = sparse or sparse_robust
     robust_rule = mixing_lib.robust_rule(cfg.mixing_impl) if robust else None
+    fused = cfg.mixing_impl == "fused_round"
+    compress = compression_lib.validate_method(cfg.gossip_compress)
+    if compress and cfg.mixing_impl not in ("pallas_packed", "fused_round"):
+        raise ValueError(
+            f"gossip_compress={cfg.gossip_compress!r} quantizes the packed "
+            f"(n, D) round delta; mixing_impl={cfg.mixing_impl!r} has no "
+            "packed buffer — use 'pallas_packed' or 'fused_round'")
+    if fused:
+        if problem.affine_coeffs is None:
+            raise ValueError(
+                "mixing_impl='fused_round' runs the K local steps as affine "
+                "updates inside the kernel; this problem has no "
+                "affine_coeffs oracle — use 'pallas_packed'")
+        if byzantine:
+            # the attack corrupts the per-leaf Δ tree, which never exists on
+            # the whole-round path (Δ is born packed inside the kernel)
+            raise ValueError(
+                "mixing_impl='fused_round' does not support byzantine; "
+                "use 'pallas_packed' (the attack applies pre-packing)")
     if cfg.topology_cycle and (sparse_w or robust):
         # the cycle path stacks dense (n, n) members and lowers them through
         # mix_dense per round; neither the neighbor-list representation nor
@@ -255,7 +293,7 @@ def make_round_step(
     packed = cfg.mixing_impl == "pallas_packed"
     pack_gd = (None if cfg.gossip_dtype in (None, "float32")
                else jnp.dtype(cfg.gossip_dtype))
-    if dynamic_w and not packed and not sparse and not robust:
+    if dynamic_w and not packed and not sparse and not robust and not fused:
         # validates the impl (ring-style neighbor exchanges cannot realize a
         # per-round arbitrary W) and gives us mix(tree, w) with w traced
         traced_mix = mixing_lib.make_traced_mixer(
@@ -283,7 +321,7 @@ def make_round_step(
         else:
             w_arr = None if w is None else jnp.asarray(w, jnp.float32)
         get_w = lambda round_idx: w_arr
-        if packed or sparse_w or robust or dynamic_w:
+        if packed or sparse_w or robust or dynamic_w or fused:
             make_mix = None  # W is consumed directly, per round
         else:
             static_mix = mixing_lib.make_mixer(
@@ -294,20 +332,95 @@ def make_round_step(
     track = algo in ("kgt_minimax", "gt_gda")
     k_steps = 1 if algo in ("dsgda", "gt_gda") else cfg.local_steps
     grads_v = jax.vmap(problem.grads)
+    # (K, n)-batched affine-coefficient oracle for the whole-round kernel
+    coeffs_v = (jax.vmap(jax.vmap(problem.affine_coeffs)) if fused else None)
+
+    def _fused_round(state: KGTState, batches, keys, w_t, mask,
+                     eta_cx, eta_cy, eta_sx, eta_sy, corr_x, corr_y):
+        """Whole-round lowering: one kernel call runs the K affine local
+        steps AND the gossip epilogue over the packed z = (x; y) state —
+        see kernels/fused_round.py.  Requires G constant across the K local
+        steps (the quadratic workload: per-client coefficients ride the
+        batch unchanged per step, only the noise shift h varies)."""
+        spec_x = packing.pack_spec(state.x)
+        spec_y = packing.pack_spec(state.y)
+        n, dzx, dzy = spec_x.n, spec_x.dim, spec_y.dim
+        dz = dzx + dzy
+        bat = jax.tree.map(lambda b: b[:k_steps], batches)
+        kk = jax.tree.map(lambda b: b[:k_steps], keys)
+        g_all, h_all = coeffs_v(bat, kk)          # (K, n, dz, dz), (K, n, dz)
+        g_mat = g_all[0]   # G is step-constant; XLA DCEs the dead steps
+
+        def cat(xb, yb):
+            return jnp.concatenate([xb, yb], axis=1)
+
+        z0 = cat(packing.pack(state.x, spec_x), packing.pack(state.y, spec_y))
+        if track:
+            cb = cat(packing.pack(state.cx), packing.pack(state.cy))
+        else:
+            cb = jnp.zeros((n, dz), jnp.float32)
+        if compress:
+            if state.ef_x is None:
+                raise ValueError(
+                    "gossip_compress is set but the state carries no EF "
+                    "residual — build it with init_state under the same cfg")
+            efb = cat(state.ef_x, state.ef_y)
+        else:
+            efb = jnp.zeros((n, dz), jnp.float32)
+        # per-column vectors: x-block descends, y-block ascends; corr = 0
+        # encodes the no-tracking variants (c' = c exactly)
+        one_x = jnp.ones((dzx,), jnp.float32)
+        one_y = jnp.ones((dzy,), jnp.float32)
+        base_step = jnp.concatenate([eta_cx * one_x, -eta_cy * one_y])
+        mask_col = (jnp.ones((n, 1), jnp.float32) if mask is None
+                    else mask.astype(jnp.float32)[:, None])
+        step = mask_col * base_step[None, :]       # inactive ⇒ Δ ≡ 0 exactly
+        etas = jnp.broadcast_to(
+            jnp.concatenate([eta_sx * one_x, eta_sy * one_y])[None, :],
+            (n, dz))
+        if track:
+            corr = jnp.concatenate([corr_x * one_x, corr_y * one_y])
+        else:
+            corr = jnp.zeros((dz,), jnp.float32)
+        corr = jnp.broadcast_to(corr[None, :], (n, dz))
+        mask_full = jnp.broadcast_to(mask_col, (n, dz))
+        z_new, c_new, ef_new = kernel_ops.fused_round(
+            w_t, z0, cb, efb, g_mat, h_all, step, etas, corr, mask_full,
+            backend=gossip_backend, compress=compress,
+            gossip_dtype=cfg.gossip_dtype)
+        if track:
+            cx = packing.unpack(c_new[:, :dzx], packing.pack_spec(state.cx))
+            cy = packing.unpack(c_new[:, dzx:], packing.pack_spec(state.cy))
+        else:
+            cx, cy = state.cx, state.cy
+        new_state = KGTState(
+            x=packing.unpack(z_new[:, :dzx], spec_x),
+            y=packing.unpack(z_new[:, dzx:], spec_y),
+            cx=cx, cy=cy, round=state.round + 1,
+            ef_x=ef_new[:, :dzx] if compress else state.ef_x,
+            ef_y=ef_new[:, dzx:] if compress else state.ef_y)
+        return (new_state if mask is None
+                else _freeze_inactive(mask, new_state, state))
 
     def _round(state: KGTState, batches, keys,
                eta_cx, eta_cy, eta_sx, eta_sy, corr_x, corr_y,
                w_t=None, mask=None, adv=None) -> KGTState:
-        if packed or sparse_w or robust or dynamic_w:
+        if packed or sparse_w or robust or dynamic_w or fused:
             if w_t is None:
                 w_t = get_w(state.round)
             if mask is not None:
                 w_t = (sparse_lib.sparse_masked_w(w_t, mask) if sparse_w
                        else stoch_lib.masked_w(w_t, mask))
-            mix = (None if packed or sparse_w or robust
+            mix = (None if packed or sparse_w or robust or fused
                    else (lambda tree: traced_mix(tree, w_t)))
         else:
             mix = make_mix(state.round)
+
+        if fused:
+            # the local steps live inside the kernel — skip the scan below
+            return _fused_round(state, batches, keys, w_t, mask,
+                                eta_cx, eta_cy, eta_sx, eta_sy,
+                                corr_x, corr_y)
 
         def local_step(carry, inp):
             xx, yy = carry
@@ -434,38 +547,63 @@ def make_round_step(
             # (or two) per leaf.  See repro.kernels.{gossip,ops}.
             spec_x = packing.pack_spec(state.x)
             spec_y = packing.pack_spec(state.y)
+            dxb = packing.pack(dx, spec_x)
+            dyb = packing.pack(dy, spec_y)
+            if compress:
+                # EF quantization of the *transmitted* Δ: the same q rides
+                # the mixing and the correction below, which preserves the
+                # Σc = 0 telescoping (see core.compression).  The residual
+                # is per-variable KGTState EF state.
+                if state.ef_x is None:
+                    raise ValueError(
+                        "gossip_compress is set but the state carries no EF "
+                        "residual — build it with init_state under the same "
+                        "cfg")
+                dxb, efx = compression_lib.ef_transmit(
+                    dxb, state.ef_x, compress, mask)
+                dyb, efy = compression_lib.ef_transmit(
+                    dyb, state.ef_y, compress, mask)
+            else:
+                efx, efy = state.ef_x, state.ef_y
             if not track:
                 # no correction state: the epilogue degenerates to a single
                 # gossip of the already-stepped parameters, W(θ + η_s·Δ) —
                 # don't move (n, D) correction buffers through the kernel
                 # just to multiply them by zero
                 xb = mixing_lib.mix_dense(
-                    packing.pack(state.x, spec_x)
-                    + eta_sx * packing.pack(dx, spec_x), w_t, gossip_dtype=pack_gd)
+                    packing.pack(state.x, spec_x) + eta_sx * dxb,
+                    w_t, gossip_dtype=pack_gd)
                 yb = mixing_lib.mix_dense(
-                    packing.pack(state.y, spec_y)
-                    + eta_sy * packing.pack(dy, spec_y), w_t, gossip_dtype=pack_gd)
+                    packing.pack(state.y, spec_y) + eta_sy * dyb,
+                    w_t, gossip_dtype=pack_gd)
                 new_state = KGTState(
                     x=packing.unpack(xb, spec_x), y=packing.unpack(yb, spec_y),
-                    cx=state.cx, cy=state.cy, round=state.round + 1)
+                    cx=state.cx, cy=state.cy, round=state.round + 1,
+                    ef_x=efx, ef_y=efy)
                 return (new_state if mask is None
                         else _freeze_inactive(mask, new_state, state))
             spec_cx = packing.pack_spec(state.cx)
             spec_cy = packing.pack_spec(state.cy)
+            # pack() builds fresh buffers each round, so their storage can
+            # back the kernel outputs (donation is a no-op under jit/CPU —
+            # see kernels.ops.fused_gossip_round)
             xb, cxb = kernel_ops.fused_gossip_round(
-                w_t, packing.pack(dx, spec_x), packing.pack(state.x, spec_x),
+                w_t, dxb, packing.pack(state.x, spec_x),
                 packing.pack(state.cx, spec_cx), eta_sx, corr_x,
-                backend=gossip_backend, gossip_dtype=cfg.gossip_dtype)
+                backend=gossip_backend, gossip_dtype=cfg.gossip_dtype,
+                donate=True)
             yb, cyb = kernel_ops.fused_gossip_round(
-                w_t, packing.pack(dy, spec_y), packing.pack(state.y, spec_y),
+                w_t, dyb, packing.pack(state.y, spec_y),
                 packing.pack(state.cy, spec_cy), eta_sy, corr_y,
-                backend=gossip_backend, gossip_dtype=cfg.gossip_dtype)
+                backend=gossip_backend, gossip_dtype=cfg.gossip_dtype,
+                donate=True)
             new_state = KGTState(
                 x=packing.unpack(xb, spec_x),
                 y=packing.unpack(yb, spec_y),
                 cx=packing.unpack(cxb, spec_cx),
                 cy=packing.unpack(cyb, spec_cy),
-                round=state.round + 1)
+                round=state.round + 1,
+                ef_x=efx, ef_y=efy)
             return (new_state if mask is None
                     else _freeze_inactive(mask, new_state, state))
 

@@ -28,6 +28,14 @@ class MinimaxProblem:
     phi_grad: Optional[Callable[[Any], Any]] = None
     # Optional deterministic full-batch gradient oracle (diagnostics).
     full_grads: Optional[Callable[[Any, Any], Any]] = None
+    # Optional affine-gradient coefficient oracle for problems whose per-client
+    # stochastic gradient is affine in the packed z = (x; y):
+    #   affine_coeffs(batch, key) -> (G, h)  with  (∇x f, ∇y f) = split(G z + h)
+    # for a single client (same batch/key semantics as ``grads``, including the
+    # noise key split).  The fused-round kernel (kernels/fused_round.py) needs
+    # this to run all K local steps in-register; ``None`` means the problem has
+    # no affine form and mixing_impl="fused_round" must be rejected.
+    affine_coeffs: Optional[Callable[[Any, Any], Any]] = None
     mu: float = 1.0
 
     def grads(self, x, y, batch, key):

@@ -221,7 +221,7 @@ def robust_mix_packed(tree: Any, w, *, rule: str, trim: int = 1,
 
 
 MIXING_IMPLS = ("dense", "ring", "fused_dense", "fused_ring", "pallas_packed",
-                "sparse_packed") + ROBUST_IMPLS
+                "sparse_packed", "fused_round") + ROBUST_IMPLS
 
 
 def make_mixer(topology: str, impl: str, w: np.ndarray,
@@ -253,6 +253,14 @@ def make_mixer(topology: str, impl: str, w: np.ndarray,
         return lambda tree: mix_sparse(tree, sp, gossip_dtype=gd)
     if impl == "pallas_packed":
         return lambda tree: mix_packed(tree, w, gossip_dtype=gd)
+    if impl == "fused_round":
+        # whole-round lowering: there is no standalone mix step — the local
+        # steps, gossip, and correction all live inside one kernel call,
+        # routed by kgt_minimax.make_round_step.  Falling through to
+        # mix_dense here would silently run the wrong program.
+        raise ValueError(
+            "mixing_impl='fused_round' has no standalone mixer; it is "
+            "routed whole-round by kgt_minimax.make_round_step")
     return lambda tree: mix_dense(tree, w, gossip_dtype=gd)
 
 
@@ -288,6 +296,10 @@ def make_traced_mixer(impl: str, gossip_dtype: str = "float32", *,
         return lambda tree, sp: mix_sparse(tree, sp, gossip_dtype=gd)
     if impl == "pallas_packed":
         return lambda tree, w: mix_packed(tree, w, gossip_dtype=gd)
+    if impl == "fused_round":
+        raise ValueError(
+            "mixing_impl='fused_round' has no standalone mixer; it is "
+            "routed whole-round by kgt_minimax.make_round_step")
     return lambda tree, w: mix_dense(tree, w, gossip_dtype=gd)
 
 

@@ -105,14 +105,43 @@ def quadratic_problem(data: Dict[str, Any], sigma: float = 0.0) -> MinimaxProble
         gy = b_bar @ x + bv_bar - mu * y
         return gx, gy
 
+    def affine_coeffs(batch, key):
+        return _quadratic_affine_coeffs(
+            batch, key, mu=mu, dx=dx, dy=dy,
+            sigma=(jnp.float32(sigma) if sigma > 0.0 else None))
+
     return MinimaxProblem(
         init_x=lambda key: jax.random.normal(key, (dx,)),
         init_y=lambda key: jnp.zeros((dy,)),
         value=value,
         phi_grad=phi_grad,
         full_grads=full_grads,
+        affine_coeffs=affine_coeffs,
         mu=mu,
     )
+
+
+def _quadratic_affine_coeffs(batch, key, *, mu, dx, dy, sigma):
+    """(G, h) with (∇x f, ∇y f) = split(G z + h) for z = concat(x, y).
+
+        G = [[A, Bᵀ], [B, −μI]]       h = [q; b] (+ σ·noise)
+
+    The noise term reuses the exact key split of ``value`` (kx for x-terms,
+    ky for y-terms), so the fused-round path sees the *same* stochastic
+    gradients as autodiff through ``value`` — bit-level parity modulo matmul
+    reassociation, held to 1e-6 by tests/test_fused_round.py.
+    """
+    a, b_mat = batch["A"], batch["B"]
+    top = jnp.concatenate([a, jnp.swapaxes(b_mat, -1, -2)], axis=-1)
+    bottom = jnp.concatenate(
+        [b_mat, -jnp.float32(mu) * jnp.eye(dy, dtype=a.dtype)], axis=-1)
+    g = jnp.concatenate([top, bottom], axis=-2)
+    h = jnp.concatenate([batch["q"], batch["b"]], axis=-1)
+    if sigma is not None:
+        kx, ky = jax.random.split(key)
+        h = h + sigma * jnp.concatenate(
+            [jax.random.normal(kx, (dx,)), jax.random.normal(ky, (dy,))])
+    return g, h
 
 
 def quadratic_cell_problem(dx: int, dy: int, mu: float = 1.0,
@@ -151,10 +180,16 @@ def quadratic_cell_problem(dx: int, dy: int, mu: float = 1.0,
             )
         return f
 
+    def affine_coeffs(batch, key):
+        return _quadratic_affine_coeffs(
+            batch, key, mu=mu, dx=dx, dy=dy,
+            sigma=(batch["sigma"] if noise else None))
+
     return MinimaxProblem(
         init_x=lambda key: jax.random.normal(key, (dx,)),
         init_y=lambda key: jnp.zeros((dy,)),
         value=value,
+        affine_coeffs=affine_coeffs,
         mu=mu,
     )
 

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import fused_round as fround_lib
 from repro.kernels import gossip as gossip_lib
 from repro.kernels import neighbor_gossip as ngossip_lib
 from repro.kernels import ref as ref_lib
@@ -100,20 +101,32 @@ def resolve_gossip_backend(backend: str) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-@partial(jax.jit, static_argnames=("backend", "block_d", "gossip_dtype"))
-def fused_gossip_round(w, delta, theta, c, eta_s, corr_scale, *,
-                       backend: str = "interpret", block_d: int = 512,
-                       gossip_dtype=None):
-    """Fused round epilogue over packed client state.
+# Measured-best block_d per packed shape, recorded by bench_gossip's one-time
+# autotune sweep ({128, 256, 512, 1024} per (n, D)).  Resolution happens in
+# the *unjitted* dispatchers below — block_d is a static argument, so it must
+# be a concrete int before tracing.  Unmeasured shapes fall back to the old
+# hardcoded-512 heuristic (clamped to the padded D).
+_BLOCK_D_CACHE: dict = {}
+BLOCK_D_CANDIDATES = (128, 256, 512, 1024)
 
-    w: (n, n); delta/theta/c: (n, D).  Returns f32
-    (θ_new, c_new) = (Wθ + η_s·WΔ, c + corr_scale·(Δ − WΔ)).
 
-    ``gossip_dtype`` (None/str) narrows the matmul operands only.  The
-    pallas/interpret path pads n to the f32 sublane multiple (8) and D to
-    the block multiple with zeros — zero-padded W rows/cols contribute
-    nothing — and slices back to (n, D).
-    """
+def record_block_d(n: int, d: int, block_d: int) -> None:
+    _BLOCK_D_CACHE[(int(n), int(d))] = int(block_d)
+
+
+def best_block_d(n: int, d: int):
+    """The measured winner for (n, D), or None if never autotuned."""
+    return _BLOCK_D_CACHE.get((int(n), int(d)))
+
+
+def _resolve_block_d(n: int, d: int, block_d) -> int:
+    if block_d is None:
+        block_d = _BLOCK_D_CACHE.get((n, d), 512)
+    return min(block_d, max(128, -(-d // 128) * 128))
+
+
+def _fused_gossip_body(w, delta, theta, c, eta_s, corr_scale, *,
+                       backend: str, block_d: int, gossip_dtype):
     gd = (None if gossip_dtype in (None, "float32")
           else jnp.dtype(gossip_dtype))
     eta_s = jnp.float32(eta_s)
@@ -125,10 +138,14 @@ def fused_gossip_round(w, delta, theta, c, eta_s, corr_scale, *,
     w = jnp.asarray(w, jnp.float32)
     wp, _ = _pad_to(w, 0, 8)
     wp, _ = _pad_to(wp, 1, 8)
-    blk = min(block_d, max(128, -(-d // 128) * 128))
+    blk = block_d
+    aligned = n % 8 == 0 and d % blk == 0
 
     def prep(x):
-        x, _ = _pad_to(x.astype(jnp.float32), 0, 8)
+        x = x.astype(jnp.float32)
+        if aligned:
+            return x
+        x, _ = _pad_to(x, 0, 8)
         x, _ = _pad_to(x, 1, blk)
         return x
 
@@ -136,7 +153,100 @@ def fused_gossip_round(w, delta, theta, c, eta_s, corr_scale, *,
     theta_new, c_new = gossip_lib.fused_gossip_nd(
         wp, prep(delta), prep(theta), prep(c), scalars, block_d=blk,
         gossip_dtype=gd, interpret=(backend == "interpret"))
+    if aligned:
+        return theta_new, c_new
     return theta_new[:n, :d], c_new[:n, :d]
+
+
+_STATIC_GOSSIP = ("backend", "block_d", "gossip_dtype")
+_fused_gossip_jit = jax.jit(_fused_gossip_body, static_argnames=_STATIC_GOSSIP)
+# Donating variant: delta/theta/c are consumed (the packed round step builds
+# fresh buffers each round, so their storage can back the outputs).  W is NOT
+# donated — callers reuse it across the x- and y-variable calls of one round.
+_fused_gossip_jit_donate = jax.jit(
+    _fused_gossip_body, static_argnames=_STATIC_GOSSIP,
+    donate_argnums=(1, 2, 3))
+
+
+def fused_gossip_round(w, delta, theta, c, eta_s, corr_scale, *,
+                       backend: str = "interpret", block_d=None,
+                       gossip_dtype=None, donate: bool = False):
+    """Fused round epilogue over packed client state.
+
+    w: (n, n); delta/theta/c: (n, D).  Returns f32
+    (θ_new, c_new) = (Wθ + η_s·WΔ, c + corr_scale·(Δ − WΔ)).
+
+    ``gossip_dtype`` (None/str) narrows the matmul operands only.  The
+    pallas/interpret path pads n to the f32 sublane multiple (8) and D to
+    the block multiple with zeros — zero-padded W rows/cols contribute
+    nothing — and slices back to (n, D); both copies are skipped when the
+    shape is already aligned.  ``block_d=None`` uses the autotuned winner
+    for this (n, D) if bench_gossip has recorded one, else 512.
+    ``donate=True`` lets XLA reuse delta/theta/c storage for the outputs —
+    only pass it when the caller holds the last reference to those buffers.
+    Donation is honored only for concrete (non-traced) inputs on a backend
+    that supports aliasing (TPU/GPU); under an outer jit the enclosing
+    computation owns the buffers, and on CPU jax ignores donation with a
+    "donated buffers were not usable" warning — both cases route to the
+    plain variant so callers can pass donate=True unconditionally.
+    """
+    blk = _resolve_block_d(delta.shape[0], delta.shape[1], block_d)
+    use_donate = (donate and not isinstance(delta, jax.core.Tracer)
+                  and jax.default_backend() in ("tpu", "gpu"))
+    fn = _fused_gossip_jit_donate if use_donate else _fused_gossip_jit
+    return fn(w, delta, theta, c, eta_s, corr_scale, backend=backend,
+              block_d=blk, gossip_dtype=gossip_dtype)
+
+
+@partial(jax.jit, static_argnames=("backend", "compress", "gossip_dtype"))
+def fused_round(w, z0, c, ef, g_mat, h_steps, step, etas, corr, mask, *,
+                backend: str = "interpret", compress=None, gossip_dtype=None):
+    """Whole Algorithm-1 round (K affine local SGDA steps + gossip epilogue)
+    in one kernel pass over the packed z = (x; y) state.
+
+    w: (n, n); z0/c/ef: (n, dz); g_mat: (n, dz, dz); h_steps: (K, n, dz);
+    step/etas/corr/mask: (n, dz) broadcast per-column vectors (signs and
+    masks pre-folded by the caller — see kernels/fused_round.py for the
+    exact semantics).  Returns f32 (z_new, c_new, ef_new).
+
+    ``compress`` (None / "bf16" / "int8") turns on error-feedback quantized
+    gossip; ``ef`` is the carried residual (pass zeros when None — it flows
+    through untouched).  The pallas/interpret path pads n → 8 and dz → 128
+    with zeros (padded G rows/cols and masked rows contribute nothing) and
+    slices back; ``backend="xla"`` routes to ``ref.fused_round_ref``.
+    """
+    gd = (None if gossip_dtype in (None, "float32")
+          else jnp.dtype(gossip_dtype))
+    if backend == "xla":
+        return ref_lib.fused_round_ref(
+            w, z0, c, ef, g_mat, h_steps, step, etas, corr, mask,
+            compress=compress, gossip_dtype=gd)
+    n, dz = z0.shape
+    k_steps = h_steps.shape[0]
+    dz_pad = max(128, -(-dz // 128) * 128)
+    if dz_pad > 1024:
+        raise ValueError(
+            f"fused_round holds G (n·dz²·4 bytes) in one VMEM block; "
+            f"dz_pad={dz_pad} > 1024 will not fit — use mixing_impl="
+            f"'pallas_packed' for larger problems")
+    wp, _ = _pad_to(jnp.asarray(w, jnp.float32), 0, 8)
+    wp, _ = _pad_to(wp, 1, 8)
+
+    def prep(x):
+        x, _ = _pad_to(x.astype(jnp.float32), 0, 8)
+        x, _ = _pad_to(x, 1, 128)
+        return x
+
+    gp, _ = _pad_to(g_mat.astype(jnp.float32), 0, 8)
+    gp, _ = _pad_to(gp, 1, 128)
+    gp, _ = _pad_to(gp, 2, 128)
+    hp, _ = _pad_to(h_steps.astype(jnp.float32), 1, 8)
+    hp, _ = _pad_to(hp, 2, 128)
+    z_new, c_new, e_new = fround_lib.fused_round_nd(
+        wp, prep(z0), prep(c), prep(ef), gp, hp, prep(step), prep(etas),
+        prep(corr), prep(mask), k_steps=k_steps, compress=compress,
+        gossip_dtype=gd, interpret=(backend == "interpret"))
+    return z_new[:n, :dz], c_new[:n, :dz], e_new[:n, :dz]
 
 
 @partial(jax.jit, static_argnames=("backend", "block_d", "gossip_dtype"))

@@ -1,0 +1,60 @@
+"""Deterministic gossip quantizers (shared by the kernels and the oracles).
+
+The compressed-gossip path transmits a quantize-dequantize image ``q =
+Q(v)`` of the packed round delta and carries the *error-feedback* residual
+``e = v − q`` into the next round (Sun & Wei's communication-efficient
+federated minimax line, PAPERS.md arXiv 2206.01132).  Both quantizers here
+are deterministic (no stochastic rounding) and satisfy the exactness
+contract the EF state relies on:
+
+    fl(v − Q(v)) == v − Q(v)   and   fl(Q(v) + (v − Q(v))) == v
+
+bit-for-bit in float32.  Why: ``Q(v)`` always lands within a factor of two
+of ``v`` (bf16 keeps f32's exponent with a <2⁻⁸ relative error; the int8
+dequant ``q·s`` with ``|q| ≥ 1`` sits within ``s/2`` of ``v ≥ s/2``), or is
+exactly zero — either way Sterbenz's lemma makes the f32 subtraction exact,
+so no mass is ever lost between the wire value and the residual
+(tests/test_fused_round.py holds both methods to bitwise equality).
+
+This module is deliberately dependency-free (pure jnp): the Pallas kernel
+body, ``kernels.ref`` oracles, and ``core.compression`` all import the same
+function, so the three lowerings cannot drift on rounding behavior.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QUANT_METHODS = ("bf16", "int8")
+
+
+def quantize_dequant(v, method: str):
+    """f32 array -> its deterministic quantize-dequantize image (f32).
+
+    * ``"bf16"`` — round-trip through bfloat16 (8-bit mantissa truncation;
+      values beyond the bf16 subnormal range snap to 0, which keeps the
+      residual exact — the residual is then ``v`` itself).
+    * ``"int8"`` — symmetric per-row linear quantization over the **last
+      axis**: scale ``s = max|v|/127`` per row, ``q = round(v/s)`` clipped
+      to ±127, dequant ``q·s``.  An all-zero row has ``s = 0`` and maps to
+      exact zeros.  Rows are clients in the packed ``(n, D)`` layout, so
+      each client's wire scale is its own — one f32 scale + D int8 codes
+      per client per round on a real wire.
+    """
+    if method == "bf16":
+        return v.astype(jnp.bfloat16).astype(jnp.float32)
+    if method == "int8":
+        s = jnp.max(jnp.abs(v), axis=-1, keepdims=True) * jnp.float32(1 / 127)
+        safe = jnp.where(s > 0, s, jnp.float32(1.0))
+        q = jnp.clip(jnp.round(v / safe), -127.0, 127.0)
+        return jnp.where(s > 0, q * safe, jnp.float32(0.0))
+    raise ValueError(f"unknown quantize method {method!r}: {QUANT_METHODS}")
+
+
+def wire_bits(method: str) -> int:
+    """Payload bits per element on the wire (the compression claim the
+    bench reports): bf16 = 16, int8 = 8 (+ one f32 scale per row)."""
+    if method == "bf16":
+        return 16
+    if method == "int8":
+        return 8
+    raise ValueError(f"unknown quantize method {method!r}: {QUANT_METHODS}")

@@ -85,6 +85,47 @@ def fused_gossip_ref(w, delta, theta, c, eta_s, corr_scale, *,
     return theta_new, c_new
 
 
+def fused_round_ref(w, z0, c, ef, g, h_steps, step, etas, corr, mask, *,
+                    compress=None, gossip_dtype=None):
+    """Whole-round oracle (K affine local SGDA steps + gossip epilogue) —
+    the ground truth for ``kernels/fused_round.py``.
+
+    w: (n, n); z0/c/ef/step/etas/corr/mask: (n, dz) f32; g: (n, dz, dz);
+    h_steps: (K, n, dz).  Semantics documented in the kernel module; the
+    quantizer is the shared ``kernels.quantize.quantize_dequant`` so the
+    lowerings cannot drift on rounding.  Returns (z_new, c_new, ef_new).
+    """
+    from repro.kernels.quantize import quantize_dequant
+
+    z0 = z0.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+
+    def body(z, h):
+        grad = jnp.einsum("nij,nj->ni", g, z,
+                          preferred_element_type=jnp.float32)
+        return z - step * (grad + h + c32), None
+
+    zk, _ = jax.lax.scan(body, z0, h_steps)
+    delta = zk - z0
+    ef32 = ef.astype(jnp.float32)
+    if compress is None:
+        q, e_new = delta, ef32
+    else:
+        v = mask * (delta + ef32)
+        q = quantize_dequant(v, compress)
+        e_new = jnp.where(mask > 0, v - q, ef32)
+    w32 = jnp.asarray(w, jnp.float32)
+    if gossip_dtype is None:
+        wg, qg, zg = w32, q, z0
+    else:
+        wg = w32.astype(gossip_dtype)
+        qg = q.astype(gossip_dtype)
+        zg = z0.astype(gossip_dtype)
+    wq = jnp.einsum("ij,jd->id", wg, qg, preferred_element_type=jnp.float32)
+    wz = jnp.einsum("ij,jd->id", wg, zg, preferred_element_type=jnp.float32)
+    return wz + etas * wq, c32 + corr * (q - wq), e_new
+
+
 def sparse_gossip_ref(neighbor_idx, neighbor_w, self_w, delta, theta, c,
                       eta_s, corr_scale, *, gossip_dtype=None):
     """Sparse (neighbor-list) round-epilogue oracle — same epilogue as

@@ -103,6 +103,8 @@ def train(args) -> dict:
         gossip_dtype=args.gossip_dtype,
         # getattr: programmatic callers (tests) build a bare Namespace
         gossip_backend=getattr(args, "gossip_backend", "auto"),
+        gossip_compress=(None if getattr(args, "gossip_compress", None)
+                         in (None, "none") else args.gossip_compress),
         topology_family=getattr(args, "topology_family", "static"),
         edge_prob=getattr(args, "edge_prob", 0.5),
         client_drop_prob=getattr(args, "client_drop_prob", 0.3),
@@ -366,6 +368,15 @@ def main() -> None:
     ap.add_argument("--mixing-impl", default="dense",
                     choices=list(mixing_lib.MIXING_IMPLS))
     ap.add_argument("--gossip-dtype", default="float32")
+    from repro.core.compression import COMPRESS_METHODS
+
+    ap.add_argument("--gossip-compress", default="none",
+                    choices=["none", *COMPRESS_METHODS],
+                    help="error-feedback quantized gossip: compress the "
+                         "transmitted round delta (bf16 | int8) and carry "
+                         "the quantization residual as per-client EF state; "
+                         "requires a packed --mixing-impl (pallas_packed / "
+                         "fused_round)")
     ap.add_argument("--gossip-backend", default="auto",
                     choices=list(GOSSIP_BACKENDS),
                     help="pallas_packed epilogue backend (auto: Pallas "

@@ -53,6 +53,7 @@ DEFAULT_POINT: Dict[str, Any] = dict(
     topology_family="static", edge_prob=0.5, client_drop_prob=0.3,
     participation=1.0,
     num_byzantine=0, attack="honest", attack_scale=1.0, robust_trim=1,
+    gossip_compress=None,
 )
 
 # Point parameters that change the traced program: same-valued across every
@@ -66,7 +67,7 @@ DEFAULT_POINT: Dict[str, Any] = dict(
 # ``cell_key=lambda f: f > 0``.)
 STATIC_KEYS = ("algorithm", "n", "K", "topology", "mixing_impl",
                "eps", "max_rounds", "eval_every", "topology_family",
-               "robust_trim")
+               "robust_trim", "gossip_compress")
 
 
 def _churn(p: Dict[str, Any]):
@@ -95,7 +96,8 @@ def _cfg(p: Dict[str, Any]) -> AlgorithmConfig:
         algorithm=p["algorithm"], num_clients=p["n"], local_steps=p["K"],
         eta_cx=p["eta_cx"], eta_cy=p["eta_cy"], eta_sx=p["eta_s"],
         eta_sy=p["eta_s"], topology=p["topology"],
-        mixing_impl=p["mixing_impl"], robust_trim=p["robust_trim"])
+        mixing_impl=p["mixing_impl"], robust_trim=p["robust_trim"],
+        gossip_compress=p["gossip_compress"])
 
 
 # Jitted per-point setup, cached on the static parameters it bakes in.
@@ -107,7 +109,9 @@ _PREPARERS: Dict[tuple, Any] = {}
 
 def _preparer(p: Dict[str, Any]):
     noise = p["sigma"] > 0.0
-    cache_key = (p["n"], p["algorithm"], noise)
+    # gossip_compress changes the state *structure* (EF leaves), so it must
+    # key the cached init program alongside the other structural statics
+    cache_key = (p["n"], p["algorithm"], noise, p["gossip_compress"])
     if cache_key in _PREPARERS:
         return _PREPARERS[cache_key]
     problem = quadratic_cell_problem(DX, DY, mu=1.0, noise=noise)

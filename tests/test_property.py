@@ -351,6 +351,78 @@ def test_participation_invariants_packed_engine(n, mask_bits, seed):
 
 
 # ---------------------------------------------------------------------------
+# error-feedback compressed gossip (the fused-round tentpole)
+# ---------------------------------------------------------------------------
+
+@given(impl=st.sampled_from(["pallas_packed", "fused_round"]),
+       method=st.sampled_from(["bf16", "int8"]),
+       n=st.sampled_from([2, 4, 8]), het=st.floats(0.0, 3.0),
+       seed=st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_sum_c_zero_under_compressed_gossip(impl, method, n, het, seed):
+    """Lossy quantization must not break Lemma 8: the transmitted q rides
+    both the correction and the mixing, so Σ_i c_i = 0 telescopes exactly
+    through bf16/int8 error-feedback gossip on either packed lowering."""
+    k = 2
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=5, dy=3, heterogeneity=het)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, eta_sx=0.4, eta_sy=0.4,
+                          topology="ring", mixing_impl=impl,
+                          gossip_backend="xla", gossip_compress=method)
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = jax.jit(make_round_step(prob, cfg))
+    for t in range(3):
+        keys = jax.random.split(jax.random.PRNGKey(t), k * n).reshape(k, n, 2)
+        stt = step(stt, kb, keys)
+    for c in (stt.cx, stt.cy):
+        mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
+        assert float(jnp.abs(mean_c).max()) < 1e-4
+
+
+@given(impl=st.sampled_from(["pallas_packed", "fused_round"]),
+       method=st.sampled_from(["bf16", "int8"]),
+       mask_bits=st.integers(0, 2**6 - 1), seed=st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_inactive_freeze_bitexact_under_compression(impl, method, mask_bits,
+                                                    seed):
+    """Churn × compression: an inactive client's (θ, c) AND its banked EF
+    residual freeze bit-exactly for any participation mask — a frozen
+    client must neither transmit nor lose carried quantization error."""
+    n, k = 6, 2
+    key = jax.random.PRNGKey(seed)
+    data = make_quadratic_data(key, n, dx=5, dy=3, heterogeneity=1.0)
+    prob = quadratic_problem(data, sigma=0.0)
+    cfg = AlgorithmConfig(num_clients=n, local_steps=k, eta_cx=0.01,
+                          eta_cy=0.05, eta_sx=0.4, eta_sy=0.4,
+                          topology="full", mixing_impl=impl,
+                          gossip_backend="xla", gossip_compress=method)
+    cb = {kk: v for kk, v in data.items() if kk != "mu"}
+    kb = jax.tree.map(lambda v: jnp.broadcast_to(v[None], (k, *v.shape)), cb)
+    stt = init_state(prob, cfg, key, init_batch=cb,
+                     init_keys=jax.random.split(key, n))
+    step = jax.jit(make_round_step(prob, cfg, participation=True))
+    mask = jnp.asarray([(mask_bits >> i) & 1 == 1 for i in range(n)])
+    # one all-active round first so the EF residual is nonzero when frozen
+    keys = jax.random.split(jax.random.PRNGKey(seed), k * n).reshape(k, n, 2)
+    stt = step(stt, kb, keys, jnp.ones((n,), bool))
+    out = step(stt, kb, keys, mask)
+    inactive = ~np.asarray(mask)
+    for name in ("x", "y", "cx", "cy", "ef_x", "ef_y"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out, name))[inactive],
+            np.asarray(getattr(stt, name))[inactive],
+            err_msg=f"{impl}/{method}:{name}")
+    for c in (out.cx, out.cy):
+        mean_c = jax.tree.leaves(jax.tree.map(lambda v: v.mean(0), c))[0]
+        assert float(jnp.abs(mean_c).max()) < 1e-4
+
+
+# ---------------------------------------------------------------------------
 # Byzantine adversary axis (the robust-aggregation tentpole)
 # ---------------------------------------------------------------------------
 
