@@ -51,10 +51,10 @@ BENCHES = {
 }
 
 
-def _provenance() -> dict:
+def _provenance(**extra) -> dict:
     from repro.sweep import store as sweep_store
 
-    return sweep_store.provenance()
+    return sweep_store.provenance(**extra)
 
 
 def _parse_names(argv) -> list:
@@ -81,6 +81,7 @@ def main() -> None:
     names = _parse_names(sys.argv[1:])
     results = {}
     failures = {}
+    bench_wall_s = {}
     for name in names:
         fn = BENCHES[name]
         print(f"# --- {name} ---", flush=True)
@@ -97,12 +98,14 @@ def main() -> None:
             failures[name] = repr(e)
             print(f"{name},FAILED,{e!r}", flush=True)
             continue
+        wall = time.time() - t0
         if not rows:
             failures[name] = "returned no rows"
             print(f"{name},FAILED,returned no rows", flush=True)
             continue
         results[name] = rows
-        print(f"{name},wall_s={time.time()-t0:.1f}", flush=True)
+        bench_wall_s[name] = round(wall, 3)
+        print(f"{name},wall_s={wall:.1f}", flush=True)
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     # merge into existing results so partial runs (e.g. `run gossip` in CI)
     # don't clobber earlier benchmarks
@@ -114,7 +117,12 @@ def main() -> None:
         except (OSError, ValueError):
             merged = {}
     merged.update(results)
-    merged["_provenance"] = _provenance()
+    # per-bench wall seconds merge like the results: a partial rerun updates
+    # its own benches' timings and keeps the rest
+    prev_prov = merged.get("_provenance") or {}
+    walls = dict(prev_prov.get("bench_wall_s") or {})
+    walls.update(bench_wall_s)
+    merged["_provenance"] = _provenance(bench_wall_s=walls)
     with open(RESULTS_PATH, "w") as f:
         json.dump(merged, f, indent=1, default=str)
     # a bench that produced rows must land in the merged store — re-read and

@@ -10,7 +10,9 @@
 #   3. engine-backed train smokes — a real (tiny) repro.launch.train run on
 #      the scan engine, once on plain host jit and once on a 4-fake-device
 #      decentralized mesh (scanned chunk with donated sharded state +
-#      device-side sampling under GSPMD).
+#      device-side sampling under GSPMD).  The host run writes a
+#      --telemetry-out JSONL which repro.obs.report must fold into a
+#      summary (nonzero exit on an empty/malformed artifact).
 #   4. repro.sweep.run smoke — a tiny 2-seed x 2-heterogeneity sweep
 #      end-to-end on the batched (vmapped-cell) path, including the
 #      results/sweeps/smoke.json store write.
@@ -66,10 +68,14 @@ fi
 echo "== step programs compile on fake CPU mesh =="
 python -m repro.launch.smoke "$@"
 
-echo "== engine-backed train smoke (host) =="
+echo "== engine-backed train smoke (host) + telemetry artifact =="
+telemetry_out="$(mktemp -d)/train.jsonl"
 python -m repro.launch.train --arch qwen2-0.5b --reduced --engine scan \
     --rounds 4 --chunk 2 --clients 2 --local-steps 2 --batch 2 \
-    --seq-len 32 --groups 4 --log-every 2
+    --seq-len 32 --groups 4 --log-every 2 --telemetry-out "${telemetry_out}"
+# repro.obs.report exits nonzero on a missing/empty/malformed JSONL — the
+# CI check that telemetry-producing runs stay well-formed
+python -m repro.obs.report "${telemetry_out}"
 
 echo "== engine-backed train smoke (decentralized mesh, fake devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \

@@ -13,6 +13,7 @@ from repro.engine.engine import (  # noqa: F401
     row_to_record,
     run,
     split_sampled,
+    telemetry_hook,
     timed_chunk_builder,
 )
 from repro.engine.diagnostics import (  # noqa: F401

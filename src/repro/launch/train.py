@@ -43,13 +43,77 @@ from repro.data import synthetic as data_lib
 from repro.optim import schedules
 
 
+# (key, format) pairs rendered when present: a metrics schema without
+# f_bar/mean_loss (e.g. quadratic_metrics_fn rows) must not KeyError the
+# console stream — format only the keys the row actually carries.
+_RECORD_FORMATS = (
+    ("f_bar", "f(x̄,ȳ)={:.4f}"),
+    ("phi_grad_norm", "‖∇Φ‖={:.4f}"),
+    ("mean_loss", "ℓ̄={:.4f}"),
+    ("eval_loss", "ℓ_eval={:.4f}"),
+    ("consensus_x", "Ξx={:.3e}"),
+    ("y_bar_norm", "|ȳ|={:.3f}"),
+)
+
+
+def _format_record(rec: dict) -> str:
+    parts = []
+    if "round" in rec:
+        parts.append(f"round {int(rec['round']):4d}")
+    for key, fmt in _RECORD_FORMATS:
+        if key in rec:
+            parts.append(fmt.format(rec[key]))
+    parts.append(f"({rec.get('wall_s', 0)}s)")
+    return "[train] " + "  ".join(parts)
+
+
 def _print_record(rec: dict) -> None:
-    eval_part = (f"  ℓ_eval={rec['eval_loss']:.4f}"
-                 if "eval_loss" in rec else "")
-    print(f"[train] round {rec['round']:4d}  f(x̄,ȳ)={rec['f_bar']:.4f}  "
-          f"ℓ̄={rec['mean_loss']:.4f}{eval_part}  "
-          f"Ξx={rec['consensus_x']:.3e}  |ȳ|={rec['y_bar_norm']:.3f}  "
-          f"({rec.get('wall_s', 0)}s)", flush=True)
+    print(_format_record(rec), flush=True)
+
+
+def _stderr_event_format(event: dict):
+    """The console view of the telemetry stream: metric rows render exactly
+    as the historical print logging; everything else stays JSONL-only."""
+    if event.get("type") != "metrics":
+        return None
+    return _format_record(
+        {k: v for k, v in event.items() if k not in ("v", "type", "t")})
+
+
+def _build_telemetry(args, algo, cfg, state):
+    """(telemetry, ledger, profiler) from the CLI flags.
+
+    The stderr sink is always on (it *is* the historical console logging);
+    the JSONL sink, the communication ledger, and the health gauges arm
+    only with ``--telemetry-out``, and the profiler only with
+    ``--profile-dir`` — so a plain run does no extra device work
+    (tests/test_obs.py pins the bit-identity of the trajectory).
+    """
+    from repro import obs
+
+    tel_path = getattr(args, "telemetry_out", None)
+    sinks = [obs.StderrSink(_stderr_event_format)]
+    ledger = None
+    if tel_path:
+        sinks.append(obs.JsonlSink(tel_path))
+        ledger = obs.ledger_for_state(algo, state)
+    telemetry = obs.Telemetry(sinks)
+    profile_dir = getattr(args, "profile_dir", None)
+    profiler = (obs.Profiler(profile_dir,
+                             num_rounds=getattr(args, "profile_rounds", 0))
+                if profile_dir else None)
+    if tel_path:
+        telemetry.meta(
+            "train", arch=cfg.name, algorithm=algo.algorithm,
+            n=algo.num_clients, local_steps=algo.local_steps,
+            topology=algo.topology, mixing_impl=algo.mixing_impl,
+            gossip_dtype=algo.gossip_dtype,
+            gossip_compress=algo.gossip_compress,
+            num_byzantine=algo.num_byzantine, attack=algo.attack,
+            participation=algo.participation_rate,
+            rounds=args.rounds, seed=args.seed,
+            ledger=ledger.describe())
+    return telemetry, ledger, profiler
 
 
 def _build_mesh_programs(args, cfg, algo, minimax, sched, sampler, metrics_fn,
@@ -247,25 +311,39 @@ def train(args) -> dict:
           + (f" (chunk={chunk_rounds})" if engine_mode == "scan" else ""),
           flush=True)
 
-    if engine_mode == "scan":
-        hooks = []
-        if args.checkpoint_every:
-            hooks.append(engine_lib.checkpoint_hook(
-                args.checkpoint_dir, args.checkpoint_every,
-                metadata={"arch": cfg.name}, verbose=True))
+    telemetry, ledger, profiler = _build_telemetry(args, algo, cfg, state)
+    try:
+        if engine_mode == "scan":
+            from repro import obs
 
-        def print_hook(state, records, prev_round):
-            for rec in records:
-                _print_record(rec)
+            # the telemetry hook routes metric rows to the stderr sink
+            # (the historical console log) and, with --telemetry-out, the
+            # ledger + health gauges into the JSONL stream
+            hooks = [engine_lib.telemetry_hook(
+                telemetry, ledger=ledger,
+                health_fn=obs.health_gauges if ledger is not None else None)]
+            if args.checkpoint_every:
+                hooks.append(engine_lib.checkpoint_hook(
+                    args.checkpoint_dir, args.checkpoint_every,
+                    metadata={"arch": cfg.name}, verbose=True))
+            if profiler is not None:
+                profiler.start()
+                hooks.append(profiler.hook)
 
-        state, history = engine_lib.run(
-            state, build_chunk, total_rounds=args.rounds,
-            chunk_rounds=chunk_rounds, hooks=[print_hook] + hooks,
-            # chunk boundaries land on every checkpoint multiple, so the
-            # requested cadence is honored exactly (matches --engine host)
-            boundary_every=args.checkpoint_every or None)
-    else:
-        history = _host_loop(args, state, step, sampler, metrics_fn, cfg)
+            state, history = engine_lib.run(
+                state, build_chunk, total_rounds=args.rounds,
+                chunk_rounds=chunk_rounds, hooks=hooks,
+                # chunk boundaries land on every checkpoint multiple, so the
+                # requested cadence is honored exactly (matches --engine host)
+                boundary_every=args.checkpoint_every or None,
+                telemetry=telemetry if ledger is not None else None)
+        else:
+            history = _host_loop(args, state, step, sampler, metrics_fn, cfg,
+                                 telemetry=telemetry, ledger=ledger)
+    finally:
+        if profiler is not None:
+            profiler.stop()
+        telemetry.close()
 
     return {
         "history": history,
@@ -273,15 +351,19 @@ def train(args) -> dict:
     }
 
 
-def _host_loop(args, state, step, sampler, metrics_fn, cfg):
+def _host_loop(args, state, step, sampler, metrics_fn, cfg,
+               telemetry=None, ledger=None):
     """The historical per-round loop (``--engine host``): per-round jit
     dispatch with eagerly sampled batches.  Kept as the A/B reference — it
     runs the same sampler and metrics as the scan engine, so trajectories
-    and logged diagnostics are identical, just slower."""
+    and logged diagnostics are identical, just slower.  Metric rows flow
+    through the telemetry stream (the stderr sink renders the historical
+    console line); the ledger accumulates per logged interval."""
     sample = jax.jit(sampler)
     metrics = jax.jit(metrics_fn)
     history = []
     t0 = time.time()
+    prev_logged = 0
     for t in range(args.rounds):
         batches, keys, extras = engine_lib.split_sampled(sample(jnp.int32(t)))
         state = step(state, batches, keys, *extras)
@@ -291,7 +373,15 @@ def _host_loop(args, state, step, sampler, metrics_fn, cfg):
                 jax.device_get(metrics(state, batches)), t)
             rec["wall_s"] = round(time.time() - t0, 3)
             history.append(rec)
-            _print_record(rec)
+            if telemetry is not None:
+                telemetry.metrics(rec)
+            else:
+                _print_record(rec)
+            if ledger is not None:
+                ledger.add_rounds(t + 1 - prev_logged)
+                telemetry.emit(ledger.event(rounds=t + 1 - prev_logged,
+                                            round=t + 1))
+                prev_logged = t + 1
 
         if args.checkpoint_every and (t + 1) % args.checkpoint_every == 0:
             path = os.path.join(args.checkpoint_dir, f"round_{t+1:06d}.npz")
@@ -387,6 +477,17 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write the structured telemetry stream (spans, "
+                         "metric rows, communication ledger, health gauges) "
+                         "as JSONL to this path; summarize it with "
+                         "`python -m repro.obs.report <path>`")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler Perfetto trace into this "
+                         "directory (open in Perfetto/TensorBoard)")
+    ap.add_argument("--profile-rounds", type=int, default=0,
+                    help="close the profiler capture window after this many "
+                         "rounds (0 = profile the whole run)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     result = train(args)

@@ -375,19 +375,58 @@ def run_cell(cell: grid_lib.Cell, *, mesh=None,
     return results, timing
 
 
+def cell_comm(p0: Dict[str, Any]):
+    """The analytic per-round communication of a cell's static lowering
+    (``repro.obs.ledger``) — the quadratic workload's packed dims are the
+    problem geometry (DX, DY)."""
+    from repro import obs
+
+    p0 = _full_point(p0)
+    return obs.round_comm(
+        mixing_impl=p0["mixing_impl"], n=p0["n"], dims=(DX, DY),
+        topology=p0["topology"],
+        track=p0["algorithm"] in ("kgt_minimax", "gt_gda"),
+        gossip_compress=p0["gossip_compress"])
+
+
 def run_sweep(spec: grid_lib.GridSpec, *, mesh=None, store: bool = True,
-              store_dir: Optional[str] = None, csv=None) -> dict:
+              store_dir: Optional[str] = None, csv=None,
+              telemetry=None) -> dict:
     """Run every static cell of ``spec`` batched; persist and return
-    ``{"points": {point_key: {...}}, "cells": {cell_key: {...}}}``."""
+    ``{"points": {point_key: {...}}, "cells": {cell_key: {...}}}``.
+
+    Each cell record carries, alongside the compile/run timing split, a
+    ``comm`` block — the communication ledger's analytic bytes/round for
+    the cell's lowering and the total bytes its trajectories moved — so the
+    stored sweep answers the paper's communication-efficiency question
+    directly.  ``telemetry`` (a ``repro.obs.Telemetry``) additionally gets
+    a per-cell span and ledger event.
+    """
+    from repro import obs
+
+    tel = telemetry if telemetry is not None else obs.NULL
     out: dict = {"name": spec.name, "points": {}, "cells": {}}
     for cell in spec.cells():
-        results, timing = run_cell(cell, mesh=mesh)
+        with tel.span("cell", sweep=spec.name, cell=cell.key,
+                      points=len(cell.points)):
+            results, timing = run_cell(cell, mesh=mesh)
+        ledger = obs.CommLedger(cell_comm(cell.points[0]))
+        # rounds actually executed: each trajectory ran to its last
+        # evaluation boundary (hit or max_rounds)
+        cell_rounds = sum(res["history"][-1][0] if res["history"] else 0
+                          for res in results)
+        ledger.add_rounds(cell_rounds)
+        tel.emit(ledger.event(rounds=cell_rounds, sweep=spec.name,
+                              cell=cell.key))
         out["cells"][cell.key] = {
             "static": cell.static, "num_trajectories": len(cell.points),
-            **timing}
+            **timing,
+            "comm": {**ledger.describe(), "rounds": cell_rounds,
+                     "bytes_total": ledger.total_bytes}}
         if csv is not None:
             csv(f"sweep,{spec.name},cell={cell.key},B={len(cell.points)},"
-                f"compile_s={timing['compile_s']},run_s={timing['run_s']}")
+                f"compile_s={timing['compile_s']},run_s={timing['run_s']},"
+                f"comm_bytes_per_round={ledger.bytes_per_round}")
         for p, res in zip(cell.points, results):
             out["points"][grid_lib.point_key(p)] = {
                 "params": dict(p), "cell": cell.key, **res}

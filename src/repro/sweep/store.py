@@ -48,12 +48,16 @@ def device_info() -> str:
 def provenance(spec: Optional[grid_lib.GridSpec] = None, **extra) -> dict:
     import jax
 
+    from repro import obs
+
     out = {
         "timestamp": datetime.datetime.now(datetime.timezone.utc)
         .isoformat(timespec="seconds"),
         "jax": jax.__version__,
         "device": device_info(),
         "git_commit": git_commit(),
+        "telemetry_version": obs.TELEMETRY_VERSION,
+        "ledger_version": obs.LEDGER_VERSION,
     }
     if spec is not None:
         gj = spec.to_json()
