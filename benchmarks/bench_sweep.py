@@ -23,10 +23,23 @@ The shared per-point *setup* program (``prepare_trajectory``) is warmed
 before either path is timed — it is cached process-wide and would otherwise
 bill its one-time compile to whichever path ran first.
 
+A third comparison proves the persistent compile cache
+(``repro.sweep.cache``): the same batched cell runs in two fresh
+subprocesses sharing one cache directory — ``cold_cache`` pays the real
+compiles and populates the cache, ``warm_cache`` deserializes executables
+from disk.  The rows record the warm run's compile fraction (the ISSUE-10
+acceptance bar: < 10% of wall) and that its per-point results are
+bit-identical to the cold run's.
+
 CSV rows: ``sweep,mode=...,traj_per_s=...,traj_rounds_per_s=...``.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 from repro.sweep import grid, run as sweep_run
@@ -44,13 +57,73 @@ SPEC = grid.GridSpec(
 )
 
 
+def _cache_child(cache_dir: str) -> dict:
+    """One fresh-process run of the batched cell against ``cache_dir`` —
+    the cold/warm halves of the cache benchmark (invoked via
+    ``python -m benchmarks.bench_sweep --cache-child DIR``)."""
+    from repro.sweep import cache as cache_lib
+
+    cache_lib.enable_xla_cache(os.path.join(cache_dir, "xla"))
+    cache = cache_lib.CompileCache(os.path.join(cache_dir, "aot"))
+    [cell] = SPEC.cells()
+    results, timing = sweep_run.run_cell(cell, cache=cache)
+    return {
+        "timing": timing,
+        "stats": dict(cache.stats),
+        # full float precision round-trips through JSON repr — the parent
+        # compares these for bit-identity
+        "results": [{"final_grad": r["final_grad"], "history": r["history"]}
+                    for r in results],
+    }
+
+
+def _cache_pair(csv) -> dict:
+    """Run the cell in two fresh subprocesses sharing one cache directory
+    and report cold-vs-warm timing + bit-identity."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    env.pop("REPRO_COMPILE_CACHE", None)  # the child gets an explicit dir
+    out: dict = {}
+    with tempfile.TemporaryDirectory(prefix="bench_sweep_cache_") as cdir:
+        for mode in ("cold_cache", "warm_cache"):
+            proc = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_sweep",
+                 "--cache-child", cdir],
+                capture_output=True, text=True, cwd=root, env=env)
+            if proc.returncode != 0:
+                raise RuntimeError(
+                    f"cache child ({mode}) failed:\n{proc.stderr}")
+            rec = json.loads(proc.stdout)
+            t = rec["timing"]
+            frac = (t["compile_s"] / t["wall_s"]) if t["wall_s"] else 0.0
+            rec["compile_frac"] = round(frac, 3)
+            csv(f"sweep,mode={mode},B={B},rounds={ROUNDS},"
+                f"wall_s={t['wall_s']},compile_s={t['compile_s']},"
+                f"run_s={t['run_s']},compile_frac={rec['compile_frac']},"
+                f"cache_hits={int(rec['stats']['hits'])},"
+                f"cache_misses={int(rec['stats']['misses'])}")
+            out[mode] = rec
+    identical = out["cold_cache"]["results"] == out["warm_cache"]["results"]
+    out["bit_identical"] = identical
+    out["warm_compile_frac"] = out["warm_cache"]["compile_frac"]
+    csv(f"sweep,summary_cache,warm_compile_frac={out['warm_compile_frac']},"
+        f"bit_identical={identical}")
+    for mode in ("cold_cache", "warm_cache"):
+        del out[mode]["results"]  # bulky; identity is already asserted
+    return out
+
+
 def run(csv=print) -> dict:
     [cell] = SPEC.cells()
     sweep_run.prepare_trajectory(cell.points[0])  # warm the shared preparer
 
-    # batched: the whole cell as one vmapped program
+    # batched: the whole cell as one vmapped program (cache off: these two
+    # rows isolate batching, not persistence — the cache rows follow)
     t0 = time.perf_counter()
-    results, bt = sweep_run.run_cell(cell)
+    results, bt = sweep_run.run_cell(cell, cache=None)
     batched_wall = time.perf_counter() - t0
     assert all(r["history"][-1][0] == ROUNDS for r in results)
     batched_tps = B / batched_wall
@@ -66,7 +139,7 @@ def run(csv=print) -> dict:
     t0 = time.perf_counter()
     seq_run_s = seq_compile_s = seq_setup_s = 0.0
     for p in cell.points:
-        hit, final, timing, hist = sweep_run.run_point(p)
+        hit, final, timing, hist = sweep_run.run_point(p, cache=None)
         seq_run_s += timing["run_s"]
         seq_compile_s += timing["compile_s"]
         seq_setup_s += timing["setup_s"]
@@ -81,8 +154,10 @@ def run(csv=print) -> dict:
     speedup_run = batched_rps / seq_rps
     csv(f"sweep,summary,speedup_traj_per_s={speedup:.2f}x,"
         f"speedup_run_only={speedup_run:.2f}x")
+    cache_pair = _cache_pair(csv)
     return {
         "B": B, "rounds": ROUNDS, "eval_every": EVAL_EVERY,
+        "cache": cache_pair,
         "batched": {"traj_per_s": round(batched_tps, 2),
                     "traj_rounds_per_s": round(batched_rps, 1),
                     "wall_s": round(batched_wall, 3), **bt},
@@ -97,3 +172,10 @@ def run(csv=print) -> dict:
         "speedup_traj_per_s": round(speedup, 2),
         "speedup_run_only": round(speedup_run, 2),
     }
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 3 and sys.argv[1] == "--cache-child":
+        print(json.dumps(_cache_child(sys.argv[2])))
+    else:
+        run()

@@ -15,7 +15,10 @@
 #      summary (nonzero exit on an empty/malformed artifact).
 #   4. repro.sweep.run smoke — a tiny 2-seed x 2-heterogeneity sweep
 #      end-to-end on the batched (vmapped-cell) path, including the
-#      results/sweeps/smoke.json store write.
+#      results/sweeps/smoke.json store write.  Then the same sweep twice
+#      against a fresh persistent compile cache (repro.sweep.cache): the
+#      warm rerun must spend <10% of its wall clock in compile_s, or the
+#      cache has regressed.
 #   5. sparse-gossip smoke — compile + one mixing_impl=sparse_packed round
 #      at n=256 with the clients dim sharded over 4 fake devices, holding
 #      the Σc=0 tracking invariant (benchmarks.bench_scale --smoke).
@@ -85,6 +88,28 @@ python -m repro.launch.train --arch qwen2-0.5b --reduced --engine scan \
 
 echo "== tiny sweep end-to-end (batched cell + store write) =="
 python -m repro.sweep.run smoke
+
+echo "== compile cache: warm rerun must spend <10% of wall in compile =="
+# the same smoke sweep twice against one fresh cache dir: the first run
+# populates it, the second must serve every executable from disk — the
+# regression gate for the persistent compile cache (repro.sweep.cache)
+cache_dir="$(mktemp -d)"
+cache_out="$(mktemp -d)"
+REPRO_COMPILE_CACHE="${cache_dir}" python -m repro.sweep.run smoke --out "${cache_out}"
+REPRO_COMPILE_CACHE="${cache_dir}" python -m repro.sweep.run smoke --out "${cache_out}"
+python - "${cache_out}/smoke.json" <<'PY'
+import json, sys
+cells = json.load(open(sys.argv[1]))["cells"].values()
+compile_s = sum(c["compile_s"] for c in cells)
+wall_s = sum(c["wall_s"] for c in cells)
+frac = compile_s / wall_s if wall_s else 0.0
+print(f"warm sweep: compile_s={compile_s:.3f} wall_s={wall_s:.3f} "
+      f"fraction={frac:.1%}")
+if frac > 0.10:
+    sys.exit(f"FAIL: warm compile fraction {frac:.1%} > 10% — "
+             "the compile cache is not being hit")
+PY
+rm -rf "${cache_dir}" "${cache_out}"
 
 echo "== sparse-gossip smoke (one sparse_packed round at n=256, 4 fake devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \

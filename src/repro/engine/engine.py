@@ -129,7 +129,8 @@ def make_chunk_builder(
     return build
 
 
-def timed_chunk_builder(build_chunk: Callable[[int], Any]):
+def timed_chunk_builder(build_chunk: Callable[[int], Any], *,
+                        cache=None, statics=None):
     """Wraps ``build(length)`` so compilation is timed apart from execution.
 
     The first call at each length goes through the jit AOT path
@@ -138,6 +139,17 @@ def timed_chunk_builder(build_chunk: Callable[[int], Any]):
     executable directly.  This is what lets ``run`` / the benchmarks report
     steady-state ``run_s`` instead of folding first-chunk compilation into
     every rounds/s and time-to-ε number.
+
+    ``cache`` (a ``repro.sweep.cache.CompileCache``) routes that AOT step
+    through the persistent executable cache: the first call per length
+    looks up ``(statics + length, arg avals)`` on disk and deserializes
+    instead of compiling when warm.  The deserialize seconds are accumulated
+    into ``compile_s`` (it is the get-an-executable cost the split exists to
+    isolate), so a warm run reports compile_s ≈ milliseconds — the cache's
+    own hit/miss/byte stats live on ``cache.stats``.  ``statics`` must name
+    every value baked into the chunk program as a closure constant (see the
+    cache module docstring); callers that cannot enumerate those must not
+    pass a cache.
 
     When the built function has no ``lower`` (a plain Python callable) or
     lowering fails (exotic jit wrappers), the whole first call — compile
@@ -156,6 +168,13 @@ def timed_chunk_builder(build_chunk: Callable[[int], Any]):
 
         def call(*args):
             if not holder:
+                if cache is not None:
+                    compiled, info = cache.get_or_compile(
+                        "chunk", (statics, ("length", length)), fn, args)
+                    stats["compile_s"] += (info["compile_s"]
+                                           + info["deserialize_s"])
+                    holder.append(compiled)
+                    return holder[0](*args)
                 t0 = time.perf_counter()
                 compiled = None
                 lower = getattr(fn, "lower", None)
@@ -270,7 +289,7 @@ def run(
     history: List[dict] = []
     start = int(state.round)
     final_round = jnp.int32(total_rounds - 1)
-    t0 = time.time()
+    t0 = time.perf_counter()
     compile_before = build.stats["compile_s"]
     r = start
     while r < total_rounds:
@@ -295,7 +314,7 @@ def run(
             with telemetry.span("readback", round=r):
                 records = records_from_buffer(buf)
         if wall_clock:
-            wall = time.time() - t0
+            wall = time.perf_counter() - t0
             # only compilation incurred by THIS run: the builder (and its
             # stats) may be shared across runs, while t0 is per-run
             comp = build.stats["compile_s"] - compile_before

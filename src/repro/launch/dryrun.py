@@ -93,7 +93,14 @@ def run_pair(arch_id: str, shape_name: str, mesh_kind: str,
     over = VARIANTS[variant]
     if over.get("moe") and cfg.moe.num_experts:
         cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, **over["moe"]))
-    t0 = time.time()
+    # monotonic clock for the compile interval (NTP slew can make wall-clock
+    # deltas negative); REPRO_COMPILE_CACHE arms jax's
+    # persistent compilation cache so repeated dry-runs skip the backend
+    # compile (the AOT layer doesn't apply: dry-runs never execute)
+    from repro.sweep import cache as cache_lib
+
+    cache_lib.from_env()
+    t0 = time.perf_counter()
 
     if shape.kind == "train":
         mcfg = mesh_lib.decentralized_mesh_config(arch_id, multi_pod=multi)
@@ -126,7 +133,7 @@ def run_pair(arch_id: str, shape_name: str, mesh_kind: str,
                 lowered = jitted.lower(p_sds, c_sds, t_sds, pos_sds)
             compiled = lowered.compile()
 
-    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["compile_s"] = round(time.perf_counter() - t0, 3)
 
     mem = compiled.memory_analysis()
     rec["memory"] = {

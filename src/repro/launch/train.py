@@ -116,6 +116,36 @@ def _build_telemetry(args, algo, cfg, state):
     return telemetry, ledger, profiler
 
 
+def _compile_cache(args):
+    """Resolve ``--compile-cache`` / ``$REPRO_COMPILE_CACHE`` into a
+    ``repro.sweep.cache.CompileCache`` (arming jax's persistent compilation
+    cache under the same root), or None when off.  Flag wins over env."""
+    from repro.sweep import cache as cache_lib
+
+    spec = getattr(args, "compile_cache", None)
+    if spec is None:
+        return cache_lib.from_env()
+    s = str(spec).strip().lower()
+    if s in cache_lib._OFF_VALUES:
+        return None
+    root = (cache_lib.default_root() if s in cache_lib._ON_VALUES
+            else str(spec))
+    cache_lib.enable_xla_cache(os.path.join(root, "xla"))
+    return cache_lib.CompileCache(os.path.join(root, "aot"))
+
+
+def _train_statics(args) -> tuple:
+    """The cache-key statics of the train chunk program: every CLI argument
+    that can reach the traced program or its *baked* constants (the data
+    model, sampler keys, and schedule are closure constants derived from
+    these — see the warning in ``repro.sweep.cache``).  Only output-path
+    arguments are excluded."""
+    skip = {"out", "telemetry_out", "profile_dir", "profile_rounds",
+            "checkpoint_dir", "checkpoint_every", "compile_cache"}
+    return tuple(sorted((k, repr(v)) for k, v in vars(args).items()
+                        if k not in skip))
+
+
 def _build_mesh_programs(args, cfg, algo, minimax, sched, sampler, metrics_fn,
                          engine_mode):
     """The repro.dist-sharded program over the local device mesh: the chunk
@@ -265,6 +295,7 @@ def train(args) -> dict:
     metrics_fn = engine_lib.dro_metrics_fn(
         problem, cfg, num_groups=args.groups, eval_batch=eval_b)
 
+    cache = _compile_cache(args)
     if mesh_mode == "decentralized":
         # Sharded path: the same jit programs the dry-run lowers for a pod,
         # here over whatever local devices exist (clients axis = n_devices).
@@ -281,6 +312,12 @@ def train(args) -> dict:
         step = jax.jit(round_step)
         build_chunk = engine_lib.make_chunk_builder(
             round_step, sampler, metrics_fn, log_every=args.log_every)
+        if cache is not None and engine_mode == "scan":
+            # the AOT layer applies only on the host path: the sharded mesh
+            # programs embed their device assignment (layer 1 — jax's own
+            # persistent cache — still covers them via _compile_cache above)
+            build_chunk = engine_lib.timed_chunk_builder(
+                build_chunk, cache=cache, statics=_train_statics(args))
     if random_w:
         # W is redrawn every round: a static spectral gap would mislabel
         # the run, so report the family (and its rate) instead
@@ -362,7 +399,9 @@ def _host_loop(args, state, step, sampler, metrics_fn, cfg,
     sample = jax.jit(sampler)
     metrics = jax.jit(metrics_fn)
     history = []
-    t0 = time.time()
+    # monotonic clock: wall_s stamps must never go backwards mid-run
+    # (wall-clock deltas can, under NTP slew) — matches engine.py
+    t0 = time.perf_counter()
     prev_logged = 0
     for t in range(args.rounds):
         batches, keys, extras = engine_lib.split_sampled(sample(jnp.int32(t)))
@@ -371,7 +410,7 @@ def _host_loop(args, state, step, sampler, metrics_fn, cfg,
         if t % args.log_every == 0 or t == args.rounds - 1:
             rec = engine_lib.row_to_record(
                 jax.device_get(metrics(state, batches)), t)
-            rec["wall_s"] = round(time.time() - t0, 3)
+            rec["wall_s"] = round(time.perf_counter() - t0, 3)
             history.append(rec)
             if telemetry is not None:
                 telemetry.metrics(rec)
@@ -488,6 +527,11 @@ def main() -> None:
     ap.add_argument("--profile-rounds", type=int, default=0,
                     help="close the profiler capture window after this many "
                          "rounds (0 = profile the whole run)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR|on|off",
+                    help="persistent compile cache (repro.sweep.cache): a "
+                         "directory roots it, 'on' uses the default "
+                         "results/.xla_cache, 'off' disables; default: "
+                         "$REPRO_COMPILE_CACHE")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     result = train(args)

@@ -84,6 +84,13 @@ def summarize(events: List[dict]) -> dict:
                          if k not in ("v", "type", "t")})
     out: dict = {"num_events": len(events), "spans": spans,
                  "counters": counters, "gauges": gauges, "meta": meta}
+    cache = {name[len("compile_cache."):]: c["sum"]
+             for name, c in counters.items()
+             if name.startswith("compile_cache.")}
+    if cache:
+        # the CompileCache emits integral counters; keep them integral
+        out["compile_cache"] = {k: int(v) if float(v).is_integer() else v
+                                for k, v in cache.items()}
     if metrics:
         last = metrics[-1]
         rounds = int(last.get("round", len(metrics) - 1)) + 1
@@ -147,6 +154,15 @@ def render(summary: dict) -> str:
             f"{led['collectives_per_round']} collectives/round, "
             f"{_fmt_bytes(led['bytes_total'])} total over "
             f"{led['rounds']} rounds")
+    cc = summary.get("compile_cache")
+    if cc:
+        parts = [f"{k}={cc[k]}" for k in
+                 ("hits", "memo_hits", "misses", "puts", "errors")
+                 if k in cc]
+        for k in ("bytes_read", "bytes_written"):
+            if k in cc:
+                parts.append(f"{k}={_fmt_bytes(int(cc[k]))}")
+        lines.append("compile cache: " + ", ".join(parts))
     if summary.get("gauges"):
         lines.append("health (last sample):")
         for name, v in sorted(summary["gauges"].items()):

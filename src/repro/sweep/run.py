@@ -18,6 +18,8 @@ trajectory program, so their trajectories are bit-identical
 from __future__ import annotations
 
 import dataclasses
+import os
+import sys
 import time
 from typing import Any, Dict, List, Optional
 
@@ -37,6 +39,7 @@ from repro.core import (
     sparse_mixing_matrix,
 )
 from repro.sweep import batched as batched_lib
+from repro.sweep import cache as cache_lib
 from repro.sweep import grid as grid_lib
 from repro.sweep import store as store_lib
 
@@ -80,6 +83,25 @@ def _byz(p: Dict[str, Any]) -> bool:
     """Whether the cell carries the Byzantine adversary extras slot —
     a static program property (extras arity)."""
     return p["num_byzantine"] > 0
+
+
+def _program_statics(p: Dict[str, Any], *, batched: bool) -> tuple:
+    """The persistent-cache statics signature of a point's traced program —
+    exactly the parameters baked into the jaxpr as constants or structure.
+    Deliberately narrower than :data:`STATIC_KEYS`: ``eps`` is host-side
+    and ``max_rounds``/``eval_every`` only choose operand values and chunk
+    lengths (keyed separately), so cells differing only in those share
+    executables."""
+    return (
+        ("algorithm", p["algorithm"]), ("n", p["n"]), ("K", p["K"]),
+        ("topology", p["topology"]), ("mixing_impl", p["mixing_impl"]),
+        ("topology_family", p["topology_family"]),
+        ("robust_trim", p["robust_trim"]),
+        ("gossip_compress", p["gossip_compress"]),
+        ("noise", p["sigma"] > 0.0), ("churn", _churn(p)),
+        ("byzantine", _byz(p)), ("batched", batched),
+        ("geometry", (DX, DY)),
+    )
 
 
 def _full_point(p: Dict[str, Any]) -> Dict[str, Any]:
@@ -136,7 +158,7 @@ def _preparer(p: Dict[str, Any]):
     return _PREPARERS[cache_key]
 
 
-def prepare_trajectory(p: Dict[str, Any]):
+def prepare_trajectory(p: Dict[str, Any], *, cache=None):
     """One point -> (Trajectories, phi-oracle constants).
 
     The historical ``run_to_epsilon`` recipe — data and problem from
@@ -145,12 +167,23 @@ def prepare_trajectory(p: Dict[str, Any]):
     paths, so trajectory starts are bit-identical by construction.  The phi
     constants are the client-mean coefficients the exact ∇Φ oracle needs
     (the cell problem reads per-client slices from the batch and has no
-    global view).
+    global view).  ``cache`` (a ``repro.sweep.cache.CompileCache``) serves
+    the jitted setup program from the persistent executable cache — its
+    statics are ``_PREPARERS``' key (seed/het/sigma are traced operands).
     """
     p = _full_point(p)
-    st, cb, consts = _preparer(p)(
-        jnp.int32(p["seed"]), jnp.float32(p["heterogeneity"]),
-        jnp.float32(p["sigma"]))
+    prep = _preparer(p)
+    args = (jnp.int32(p["seed"]), jnp.float32(p["heterogeneity"]),
+            jnp.float32(p["sigma"]))
+    if cache is not None:
+        prep, _ = cache.get_or_compile(
+            "preparer",
+            (("n", p["n"]), ("algorithm", p["algorithm"]),
+             ("noise", p["sigma"] > 0.0),
+             ("gossip_compress", p["gossip_compress"]),
+             ("geometry", (DX, DY))),
+            prep, args)
+    st, cb, consts = prep(*args)
     kb = jax.tree.map(
         lambda v: jnp.broadcast_to(v[None], (p["K"], *v.shape)), cb)
     random_w, part = _churn(p)
@@ -234,50 +267,106 @@ def _cell_programs(p: Dict[str, Any], *, batched: bool, mesh=None,
     return build, eval_fn
 
 
-def _timed_eval(eval_fn):
+def _timed_eval(eval_fn, *, cache=None, statics=None, telemetry=None):
     """AOT-compile ``eval_fn`` on first use, reporting the compile seconds
-    (same split discipline as ``engine.timed_chunk_builder``)."""
+    (same split discipline as ``engine.timed_chunk_builder``).  With a
+    ``cache`` the executable is served from/stored to the persistent
+    compile cache under kind ``"phi_eval"``.
+
+    A failed AOT compile falls back to the on-demand jit — loudly (stderr +
+    an ``eval_aot_fallback`` telemetry counter), and *without* charging the
+    failed attempt to ``compile_s``: the on-demand path re-traces inside the
+    first real call, so attributing the aborted lower() time would
+    double-count against ``run_s``.
+    """
     holder: dict = {}
 
     def call(*args):
         if "fn" not in holder:
-            t0 = time.perf_counter()
-            try:
-                holder["fn"] = eval_fn.lower(*args).compile()
-            except Exception:
-                holder["fn"] = eval_fn
-            holder["compile_s"] = time.perf_counter() - t0
+            if cache is not None:
+                fn, info = cache.get_or_compile("phi_eval", statics,
+                                                eval_fn, args)
+                holder["fn"] = fn
+                holder["compile_s"] = (info["compile_s"]
+                                       + info["deserialize_s"])
+            else:
+                t0 = time.perf_counter()
+                try:
+                    holder["fn"] = eval_fn.lower(*args).compile()
+                    holder["compile_s"] = time.perf_counter() - t0
+                except Exception as e:
+                    holder["fn"] = eval_fn
+                    holder["compile_s"] = 0.0
+                    print(f"[sweep] eval AOT compile failed "
+                          f"({type(e).__name__}: {e}); falling back to "
+                          "on-demand jit", file=sys.stderr, flush=True)
+                    if telemetry is not None:
+                        telemetry.counter("eval_aot_fallback", 1,
+                                          error=type(e).__name__)
         return holder["fn"](*args)
 
     call.stats = holder
     return call
 
 
-def run_point(p: Dict[str, Any]):
+def _timing_split(wall: float, compile_s: float, setup_s: float) -> dict:
+    """The ``{wall_s, compile_s, setup_s, run_s}`` record with the engine's
+    rounding discipline: ms-grained, and ``run_s`` clamped at zero — the
+    subtraction runs over three separately-measured intervals, so rounding
+    jitter (or a cache making compile_s ≈ wall) must not surface as a
+    negative runtime."""
+    return {"wall_s": round(wall, 3), "compile_s": round(compile_s, 3),
+            "setup_s": round(setup_s, 3),
+            "run_s": max(0.0, round(wall - compile_s - setup_s, 3))}
+
+
+def _chunk_lengths(length: int, cache) -> tuple:
+    """The sub-chunk schedule for one ``eval_every`` interval: the
+    power-of-two bucket decomposition when a cache wants length sharing
+    (bit-exact — scan chunks compose through the carried state), the plain
+    length otherwise."""
+    if cache is not None and cache.bucket_lengths:
+        return cache_lib.length_schedule(length)
+    return (length,)
+
+
+def run_point(p: Dict[str, Any], *, cache=cache_lib.UNSET, telemetry=None):
     """Sequential reference: one point, engine-chunked scan per
     ``eval_every`` interval, ∇Φ checked at chunk boundaries with immediate
     stop — the execution `benchmarks.common.run_to_epsilon` delegates to.
 
     Returns ``(rounds_to_eps or None, final ‖∇Φ‖, timing, history)`` where
-    ``timing = {"wall_s", "compile_s", "run_s"}`` splits XLA compilation
-    from steady-state execution and ``history`` is ``[(round, grad), …]``
-    on the evaluation grid.
+    ``timing = {"wall_s", "compile_s", "setup_s", "run_s"}`` splits XLA
+    compilation from steady-state execution and ``history`` is
+    ``[(round, grad), …]`` on the evaluation grid.
+
+    ``cache`` is a ``repro.sweep.cache.CompileCache`` (default: resolved
+    from ``$REPRO_COMPILE_CACHE``; ``None`` disables): the setup, chunk,
+    and eval executables are served from disk when warm, and chunk lengths
+    are served from the shared power-of-two pool.
     """
     p = _full_point(p)
+    cache = cache_lib.resolve(cache, telemetry)
     t0 = time.perf_counter()
-    traj, consts = prepare_trajectory(p)
+    traj, consts = prepare_trajectory(p, cache=cache)
     jax.block_until_ready(traj.state.x)
     setup_s = time.perf_counter() - t0
+    statics = _program_statics(p, batched=False)
     build_raw, eval_raw = _cell_programs(p, batched=False)
-    build = engine_lib.timed_chunk_builder(build_raw)
-    eval_fn = _timed_eval(eval_raw)
+    build = engine_lib.timed_chunk_builder(build_raw, cache=cache,
+                                           statics=statics)
+    eval_fn = _timed_eval(eval_raw, cache=cache,
+                          statics=(("kind", "phi"), ("geometry", (DX, DY)),
+                                   ("n", p["n"])),
+                          telemetry=telemetry)
     hist: List[tuple] = []
     hit = None
     final_round = jnp.int32(p["max_rounds"] - 1)
     r = 0
     while r < p["max_rounds"]:
         length = min(p["eval_every"], p["max_rounds"] - r)
-        traj, _ = build(length)(traj, final_round)
+        for sub in _chunk_lengths(length, cache):
+            traj, _ = build(sub)(traj, final_round)
         r += length
         g = float(eval_fn(consts, traj.state.x))
         hist.append((r, g))
@@ -287,14 +376,14 @@ def run_point(p: Dict[str, Any]):
     final = hist[-1][1] if hist else float("nan")
     wall = time.perf_counter() - t0
     compile_s = build.stats["compile_s"] + eval_fn.stats.get("compile_s", 0.0)
-    timing = {"wall_s": wall, "compile_s": compile_s, "setup_s": setup_s,
-              "run_s": wall - compile_s - setup_s}
+    timing = _timing_split(wall, compile_s, setup_s)
     return hit, final, timing, hist
 
 
 def run_cell(cell: grid_lib.Cell, *, mesh=None,
              mesh_axis: str = batched_lib.CLIENTS,
-             return_trajs: bool = False):
+             return_trajs: bool = False, cache=cache_lib.UNSET,
+             telemetry=None):
     """One static cell as a batched program: returns
     ``(per-point result dicts, timing)`` — with ``return_trajs``,
     ``((results, timing), trajectories)`` including the final stacked
@@ -305,6 +394,17 @@ def run_cell(cell: grid_lib.Cell, *, mesh=None,
     trajectories, newly-converged ones record their hit round and drop out
     of the ``active`` mask (their state freezes at this exact boundary),
     and the loop exits early once every trajectory has converged.
+
+    With a compile ``cache`` (default: ``$REPRO_COMPILE_CACHE``) the cell's
+    executables persist across processes, and the trajectory batch is
+    padded up to its :func:`repro.sweep.cache.bucket_batch` bucket with
+    ``active=False`` clones of trajectory 0, so cells differing only in
+    point count share one vmapped program — real rows are bit-identical
+    (vmap slice stability, pinned by tests) and results are sliced back to
+    the real batch.  Under a ``mesh`` the AOT/bucket layers are skipped
+    (padding would change the sharding divisibility and serialized
+    executables embed their device assignment); jax's own persistent cache
+    (layer 1) still applies.
     """
     points = [_full_point(p) for p in cell.points]
     p0 = points[0]
@@ -323,28 +423,46 @@ def run_cell(cell: grid_lib.Cell, *, mesh=None,
                 "cell_key=lambda s: s > 0, a participation axis spanning "
                 "1.0 cell_key=lambda r: r < 1)")
 
+    cache = cache_lib.resolve(cache, telemetry)
+    if mesh is not None:
+        cache = None  # layer 1 (jax's own cache) still applies
     t0 = time.perf_counter()
-    prepared = [prepare_trajectory(p) for p in points]
+    prepared = [prepare_trajectory(p, cache=cache) for p in points]
     trajs = batched_lib.tree_stack([tr for tr, _ in prepared])
     consts = [c for _, c in prepared]  # per-trajectory, never stacked
+    B = len(points)
+    pad = 0
+    if cache is not None and cache.bucket_batch:
+        pad = cache_lib.bucket_batch(B) - B
+        trajs = cache_lib.pad_trajectories(trajs, pad)
     jax.block_until_ready(trajs.state.x)
     setup_s = time.perf_counter() - t0
     if mesh is not None:
         trajs = jax.device_put(trajs, batched_lib.batch_sharding(mesh, mesh_axis))
     build_raw, eval_raw = _cell_programs(p0, batched=True, mesh=mesh,
                                          mesh_axis=mesh_axis)
-    build = engine_lib.timed_chunk_builder(build_raw)
-    eval_fn = _timed_eval(eval_raw)
+    build = engine_lib.timed_chunk_builder(
+        build_raw, cache=cache, statics=_program_statics(p0, batched=True))
+    eval_fn = _timed_eval(eval_raw, cache=cache,
+                          statics=(("kind", "phi"), ("geometry", (DX, DY)),
+                                   ("n", p0["n"])),
+                          telemetry=telemetry)
 
-    B = len(points)
     active = np.ones(B, bool)
     hit: List[Optional[int]] = [None] * B
     hist: List[List[tuple]] = [[] for _ in range(B)]
     final_round = jnp.int32(p0["max_rounds"] - 1)
+
+    def full_mask(live):
+        # padding rows stay frozen (False) for the whole run
+        return jnp.asarray(np.concatenate([live, np.zeros(pad, bool)])
+                           if pad else live)
+
     r = 0
     while r < p0["max_rounds"]:
         length = min(p0["eval_every"], p0["max_rounds"] - r)
-        trajs, _ = build(length)(trajs, final_round)
+        for sub in _chunk_lengths(length, cache):
+            trajs, _ = build(sub)(trajs, final_round)
         r += length
         # dispatch the oracle for every live trajectory, then sync once
         g = {i: eval_fn(consts[i], trajs.state.x[i])
@@ -357,13 +475,11 @@ def run_cell(cell: grid_lib.Cell, *, mesh=None,
                 active[i] = False
         if not active.any():
             break
-        trajs = dataclasses.replace(trajs, active=jnp.asarray(active))
+        trajs = dataclasses.replace(trajs, active=full_mask(active))
 
     wall = time.perf_counter() - t0
     compile_s = build.stats["compile_s"] + eval_fn.stats.get("compile_s", 0.0)
-    timing = {"wall_s": round(wall, 3), "compile_s": round(compile_s, 3),
-              "setup_s": round(setup_s, 3),
-              "run_s": round(wall - compile_s - setup_s, 3)}
+    timing = _timing_split(wall, compile_s, setup_s)
     results = [
         {"rounds_to_eps": hit[i],
          "final_grad": hist[i][-1][1] if hist[i] else float("nan"),
@@ -371,6 +487,8 @@ def run_cell(cell: grid_lib.Cell, *, mesh=None,
         for i in range(B)
     ]
     if return_trajs:
+        if pad:
+            trajs = jax.tree.map(lambda x: x[:B], trajs)
         return (results, timing), trajs
     return results, timing
 
@@ -391,7 +509,7 @@ def cell_comm(p0: Dict[str, Any]):
 
 def run_sweep(spec: grid_lib.GridSpec, *, mesh=None, store: bool = True,
               store_dir: Optional[str] = None, csv=None,
-              telemetry=None) -> dict:
+              telemetry=None, cache=cache_lib.UNSET) -> dict:
     """Run every static cell of ``spec`` batched; persist and return
     ``{"points": {point_key: {...}}, "cells": {cell_key: {...}}}``.
 
@@ -400,16 +518,20 @@ def run_sweep(spec: grid_lib.GridSpec, *, mesh=None, store: bool = True,
     the cell's lowering and the total bytes its trajectories moved — so the
     stored sweep answers the paper's communication-efficiency question
     directly.  ``telemetry`` (a ``repro.obs.Telemetry``) additionally gets
-    a per-cell span and ledger event.
+    a per-cell span and ledger event, plus the cache's ``compile_cache.*``
+    counters when the persistent compile cache is active; the cache's
+    stats snapshot is stamped into the stored sweep's provenance.
     """
     from repro import obs
 
     tel = telemetry if telemetry is not None else obs.NULL
+    cache = cache_lib.resolve(cache, telemetry)
     out: dict = {"name": spec.name, "points": {}, "cells": {}}
     for cell in spec.cells():
         with tel.span("cell", sweep=spec.name, cell=cell.key,
                       points=len(cell.points)):
-            results, timing = run_cell(cell, mesh=mesh)
+            results, timing = run_cell(cell, mesh=mesh, cache=cache,
+                                       telemetry=telemetry)
         ledger = obs.CommLedger(cell_comm(cell.points[0]))
         # rounds actually executed: each trajectory ran to its last
         # evaluation boundary (hit or max_rounds)
@@ -430,8 +552,14 @@ def run_sweep(spec: grid_lib.GridSpec, *, mesh=None, store: bool = True,
         for p, res in zip(cell.points, results):
             out["points"][grid_lib.point_key(p)] = {
                 "params": dict(p), "cell": cell.key, **res}
+    if cache is not None:
+        out["compile_cache"] = cache.describe()
     if store:
-        path = store_lib.save(spec.name, out, spec, directory=store_dir)
+        path = store_lib.save(
+            spec.name, out, spec, directory=store_dir,
+            extra_provenance=(
+                {"compile_cache": cache.describe()} if cache is not None
+                else None))
         out["store_path"] = path
     return out
 
@@ -473,6 +601,11 @@ def main() -> None:
     ap.add_argument("--list", action="store_true", help="list known sweeps")
     ap.add_argument("--out", default=None, help="store directory "
                     "(default: <repo>/results/sweeps)")
+    ap.add_argument("--cache-dir", default=None, help="persistent compile "
+                    "cache root (default: $REPRO_COMPILE_CACHE, else "
+                    "<repo>/results/.xla_cache)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the persistent compile cache")
     args = ap.parse_args()
     if args.list or not args.names:
         for name, spec in sorted(defs.SWEEPS.items()):
@@ -480,13 +613,31 @@ def main() -> None:
             npts = sum(len(c.points) for c in cells)
             print(f"{name}: {npts} points in {len(cells)} cells")
         return
+    if args.no_cache:
+        cache = None
+    elif args.cache_dir is not None:
+        cache_lib.enable_xla_cache(os.path.join(args.cache_dir, "xla"))
+        cache = cache_lib.CompileCache(os.path.join(args.cache_dir, "aot"))
+    else:
+        # CLI default is cache ON unless the env says otherwise
+        cache = cache_lib.from_env()
+        if cache is None and os.environ.get(cache_lib.ENV_CACHE) is None:
+            cache_lib.enable_xla_cache()
+            cache = cache_lib.CompileCache()
     for name in args.names:
         spec = defs.SWEEPS[name]
         t0 = time.perf_counter()
-        res = run_sweep(spec, store_dir=args.out, csv=print)
+        res = run_sweep(spec, store_dir=args.out, csv=print, cache=cache)
         print(f"sweep,{name},points={len(res['points'])},"
               f"cells={len(res['cells'])},wall_s={time.perf_counter()-t0:.1f},"
               f"store={res.get('store_path')}")
+        if cache is not None:
+            s = cache.stats
+            print(f"sweep,{name},cache_hits={int(s['hits'])},"
+                  f"cache_misses={int(s['misses'])},"
+                  f"cache_memo_hits={int(s['memo_hits'])},"
+                  f"cache_errors={int(s['errors'])},"
+                  f"cache_bytes_written={int(s['bytes_written'])}")
 
 
 if __name__ == "__main__":

@@ -83,9 +83,12 @@ def _jsonable(obj: Any):
 
 
 def save(name: str, result: dict, spec: Optional[grid_lib.GridSpec] = None,
-         directory: Optional[str] = None) -> str:
+         directory: Optional[str] = None,
+         extra_provenance: Optional[dict] = None) -> str:
     """Merge ``result`` (``{"points": ..., "cells": ...}``) into the named
-    store file and return its path."""
+    store file and return its path.  ``extra_provenance`` keys (e.g. the
+    compile cache's ``describe()`` snapshot) are merged into the restamped
+    ``provenance`` block."""
     directory = directory or default_dir()
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"{name}.json")
@@ -101,7 +104,8 @@ def save(name: str, result: dict, spec: Optional[grid_lib.GridSpec] = None,
             pass
     merged["points"].update(_jsonable(result.get("points", {})))
     merged["cells"].update(_jsonable(result.get("cells", {})))
-    merged["provenance"] = _jsonable(provenance(spec))
+    merged["provenance"] = _jsonable(provenance(spec,
+                                                **(extra_provenance or {})))
     with open(path, "w") as f:
         json.dump(merged, f, indent=1, default=str)
     return path
